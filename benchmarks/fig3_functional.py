@@ -1,0 +1,31 @@
+"""Fig. 3 reproduction: 8-operand vector-scalar functional verification
+with cycle-exact execution profiles for both proposed designs."""
+
+from __future__ import annotations
+
+import numpy as np
+import jax.numpy as jnp
+
+from repro.core.multipliers import lut_array, nibble_precompute
+
+
+def run() -> list[str]:
+    rows = ["fig3,design,n_operands,cycles,all_products_exact"]
+    rng = np.random.default_rng(42)
+    a = jnp.asarray(rng.integers(0, 256, 8), jnp.int32)   # Fig. 3 stimulus
+    b = 0xB7
+    expected = np.asarray(a) * b
+
+    nib = nibble_precompute(a, b)
+    rows.append(f"fig3,nibble_precompute,8,{nib.cycles},"
+                f"{bool(np.array_equal(np.asarray(nib.products), expected))}")
+    lm = lut_array(a, b)
+    rows.append(f"fig3,lut_array,8,{lm.cycles},"
+                f"{bool(np.array_equal(np.asarray(lm.products), expected))}")
+    # paper: nibble = 2 cycles/element × 8 = 16; LUT array = 1 cycle
+    assert nib.cycles == 16 and lm.cycles == 1
+    return rows
+
+
+if __name__ == "__main__":
+    print("\n".join(run()))

@@ -1,0 +1,44 @@
+"""Fig. 4 reproduction: area (µm²) and power (mW) across 4/8/16-operand
+configurations from the calibrated analytical model, with the paper's
+reported values and relative error side by side; plus the 128-lane
+extrapolation the abstract alludes to."""
+
+from __future__ import annotations
+
+from repro.core import cycle_model as cm
+
+
+def run() -> list[str]:
+    rows = ["fig4,arch,metric,n_ops,model,paper,rel_err"]
+    for metric, fn in (("area_um2", cm.area_um2), ("power_mw", cm.power_mw)):
+        for arch in cm.ARCHES:
+            reported = cm.paper_reported(
+                "area" if metric == "area_um2" else "power", arch)
+            for n, paper in zip((4, 8, 16), reported):
+                model = fn(arch, n)
+                err = "" if paper is None else f"{abs(model-paper)/paper:.4f}"
+                paper_s = "" if paper is None else f"{paper}"
+                rows.append(f"fig4,{arch},{metric},{n},{model:.4f},"
+                            f"{paper_s},{err}")
+
+    # headline claims
+    rows.append("fig4_claim,area_vs_shift_add_16,"
+                f"{cm.improvement_vs('shift_add', 'nibble_precompute', 'area', 16):.3f},paper,1.69")
+    rows.append("fig4_claim,power_vs_shift_add_16,"
+                f"{cm.improvement_vs('shift_add', 'nibble_precompute', 'power', 16):.3f},paper,1.63")
+    rows.append("fig4_claim,area_vs_lut_16,"
+                f"{cm.area_um2('lut_array', 16) / cm.area_um2('nibble_precompute', 16):.3f},paper,2.6")
+    rows.append("fig4_claim,power_vs_lut_16,"
+                f"{cm.power_mw('lut_array', 16) / cm.power_mw('nibble_precompute', 16):.3f},"
+                "paper,2.7 (inconsistent with paper Fig4b data = 4.56)")
+    # 128-lane extrapolation (abstract's truncated '128-' sentence)
+    for arch in cm.ARCHES:
+        rows.append(f"fig4_extrap128,{arch},area_um2,128,"
+                    f"{cm.area_um2(arch, 128):.1f},,")
+        rows.append(f"fig4_extrap128,{arch},power_mw,128,"
+                    f"{cm.power_mw(arch, 128):.4f},,")
+    return rows
+
+
+if __name__ == "__main__":
+    print("\n".join(run()))

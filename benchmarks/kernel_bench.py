@@ -1,0 +1,85 @@
+"""Kernel-level benchmark: the paper's design points at tensor scale.
+
+Per (M, N, K) shape, times the XLA formulations of each multiplier
+design point (CPU wall-clock is a functional proxy — the structural
+numbers that transfer to TPU are the flops/bytes derived alongside):
+
+* dense bf16 matmul             — no-paper baseline
+* w8a8 nibble (2-pass)          — the paper's precompute-reuse design
+* w8a8 one-shot int8 dot        — "shift-add equivalent" monolithic int
+* LUT one-hot selection         — the paper's LUT array design
+* w4a8 nibble (packed weights)  — nibble storage win (HBM bytes halved)
+
+Pallas-kernel variants run in interpret mode for correctness, not speed;
+their per-design flops/bytes columns are the TPU-side cost model.
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.linear import lut_matmul_xla, nibble_matmul_xla
+from repro.core.nibble import pack_int4, unpack_int4
+
+SHAPES = [(256, 1024, 1024), (512, 4096, 1024)]
+
+
+def _time(fn, *args, iters=5):
+    fn(*args)[0].block_until_ready() if isinstance(fn(*args), tuple) else \
+        fn(*args).block_until_ready()
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(*args)
+    out.block_until_ready()
+    return (time.perf_counter() - t0) / iters * 1e6
+
+
+def run() -> list[str]:
+    rows = ["kernel,design,M,N,K,us_per_call,int_flops,weight_bytes,"
+            "mxu_passes"]
+    rng = np.random.default_rng(0)
+    for m, n, k in SHAPES:
+        x8 = jnp.asarray(rng.integers(-128, 128, (m, k)), jnp.int8)
+        w8 = jnp.asarray(rng.integers(-128, 128, (k, n)), jnp.int8)
+        w4 = jnp.asarray(rng.integers(-8, 8, (k, n)), jnp.int8)
+        w4p = pack_int4(w4)
+        xb = jnp.asarray(rng.normal(size=(m, k)), jnp.bfloat16)
+        wb = jnp.asarray(rng.normal(size=(k, n)), jnp.bfloat16)
+
+        flops = 2 * m * n * k
+
+        dense = jax.jit(lambda a, b: a @ b)
+        t = _time(dense, xb, wb)
+        rows.append(f"kernel,dense_bf16,{m},{n},{k},{t:.1f},{flops},"
+                    f"{k * n * 2},1")
+
+        one_shot = jax.jit(lambda a, b: jax.lax.dot_general(
+            a, b, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.int32))
+        t = _time(one_shot, x8, w8)
+        rows.append(f"kernel,int8_monolithic,{m},{n},{k},{t:.1f},{flops},"
+                    f"{k * n},1")
+
+        nib = jax.jit(nibble_matmul_xla)
+        t = _time(nib, x8, w8)
+        rows.append(f"kernel,w8a8_nibble,{m},{n},{k},{t:.1f},{2 * flops},"
+                    f"{k * n},2")
+
+        lut = jax.jit(lut_matmul_xla)
+        t = _time(lut, x8, w8)
+        rows.append(f"kernel,lut_onehot,{m},{n},{k},{t:.1f},"
+                    f"{flops * 16 + flops},{k * n},1")
+
+        w4nib = jax.jit(lambda a, wp: nibble_matmul_xla(a, unpack_int4(wp)))
+        t = _time(w4nib, x8, w4p)
+        rows.append(f"kernel,w4a8_nibble_packed,{m},{n},{k},{t:.1f},"
+                    f"{2 * flops},{k * n // 2},2")
+    return rows
+
+
+if __name__ == "__main__":
+    print("\n".join(run()))

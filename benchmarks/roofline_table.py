@@ -1,0 +1,34 @@
+"""Roofline table over the dry-run artifacts (§Roofline deliverable).
+
+Reads dryrun_results.json (produced by ``repro.launch.dryrun``) and
+emits the three-term roofline per (arch × shape × mesh) cell."""
+
+from __future__ import annotations
+
+import os
+
+from repro.roofline import analyze_file
+
+DEFAULT_PATH = os.path.join(os.path.dirname(__file__), "..",
+                            "dryrun_results.json")
+
+
+def run(path: str = DEFAULT_PATH) -> list[str]:
+    if not os.path.exists(path):
+        return ["roofline,SKIPPED: run `python -m repro.launch.dryrun` first"]
+    rows = ["roofline,arch,shape,mesh,compute_s,memory_s,collective_s,"
+            "dominant,useful_ratio,roofline_frac"]
+    # single-pod only (per the brief): multi-pod cells skip the scan-
+    # extrapolation cost pass, so their raw numbers are not roofline-grade.
+    for t in analyze_file(path):
+        if "2pod" in t.mesh:
+            continue
+        rows.append(
+            f"roofline,{t.arch},{t.shape},{t.mesh},{t.compute_s:.5f},"
+            f"{t.memory_s:.5f},{t.collective_s:.5f},{t.dominant},"
+            f"{t.useful_ratio:.3f},{t.roofline_fraction:.3f}")
+    return rows
+
+
+if __name__ == "__main__":
+    print("\n".join(run()))

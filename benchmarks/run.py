@@ -1,0 +1,21 @@
+"""Benchmark harness: one module per paper table/figure.
+
+Emits CSV rows ``name,...`` per benchmark; see each module's docstring
+for the paper artifact it reproduces.
+"""
+
+from __future__ import annotations
+
+
+def main() -> None:
+    from benchmarks import (fig3_functional, fig4_area_power, kernel_bench,
+                            roofline_table, table2_cycles)
+    for mod in (table2_cycles, fig3_functional, fig4_area_power,
+                kernel_bench, roofline_table):
+        print(f"\n# === {mod.__name__} ===")
+        for row in mod.run():
+            print(row)
+
+
+if __name__ == '__main__':
+    main()

@@ -1,0 +1,36 @@
+"""Table 2 reproduction: analytical complexity + cycle latency, plus the
+*measured* cycle accounting from the executable multiplier models."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core import cycle_model as cm
+from repro.core.multipliers import MULTIPLIERS
+
+PAPER_TABLE2 = {  # arch: (complexity, 1-op cycles, 16-op cycles)
+    "shift_add": ("O(W)", 8, 128),
+    "booth_radix2": ("O(W/2)", 4, 64),
+    "nibble_precompute": ("O(W/4)", 2, 32),
+    "wallace": ("O(1)", 1, 1),
+    "lut_array": ("O(1)", 1, 1),
+}
+
+
+def run() -> list[str]:
+    rows = ["table2,arch,complexity,cyc_1op_model,cyc_1op_paper,"
+            "cyc_16op_model,cyc_16op_paper,match"]
+    a16 = jnp.arange(16, dtype=jnp.int32)
+    for arch, (cx, c1_paper, c16_paper) in PAPER_TABLE2.items():
+        tr = MULTIPLIERS[arch](a16, 7)
+        c1_model = cm.cycles_per_operand(arch)
+        c16_model = cm.total_cycles(arch, 16)
+        assert tr.cycles == c16_model, (arch, tr.cycles, c16_model)
+        match = (c1_model == c1_paper) and (c16_model == c16_paper)
+        rows.append(f"table2,{arch},{cx},{c1_model},{c1_paper},"
+                    f"{c16_model},{c16_paper},{match}")
+    return rows
+
+
+if __name__ == "__main__":
+    print("\n".join(run()))

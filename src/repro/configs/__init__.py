@@ -1,0 +1,11 @@
+"""Architecture configs for the assigned zoo.  ``get_config(name)``
+accepts both the assignment ids (``gemma3-1b``) and module names
+(``gemma3_1b``)."""
+
+from repro.configs.base import (  # noqa: F401
+    ARCH_NAMES,
+    LayerSpec,
+    ModelConfig,
+    get_config,
+    reduced,
+)

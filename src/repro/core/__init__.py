@@ -1,0 +1,13 @@
+"""Core: the paper's contribution (nibble precompute-reuse multiplication).
+
+Layers:
+* ``nibble``      — nibble decomposition + the 16 precompute-logic recipes
+* ``multipliers`` — bit-faithful models of all five architectures
+* ``quantize``    — int8/int4 quantization substrate + QAT STE
+* ``cycle_model`` — analytical Table-2 / Fig-4 reproduction
+* ``linear``      — QuantLinear, the framework-facing layer
+"""
+
+from repro.core import cycle_model, linear, multipliers, nibble, quantize  # noqa: F401
+from repro.core.linear import linear_apply, linear_init  # noqa: F401
+from repro.core.multipliers import MULTIPLIERS  # noqa: F401

@@ -1,0 +1,183 @@
+"""Nibble decomposition and precompute-logic (PL) primitives.
+
+This module is the bit-level heart of the paper: every operand is treated
+as a composition of 4-bit nibbles, and multiplication by a nibble value
+``k`` is realised as a fixed shift-and-add *recipe* (the paper's
+"precompute logic", Fig. 2(b)) rather than as a generic multiply.
+
+Two operand conventions are supported:
+
+* **unsigned** (the paper's convention): an 8-bit operand ``x`` is
+  ``x = (hi << 4) | lo`` with ``hi, lo`` in ``[0, 16)``.
+* **signed** (what int8 inference uses): ``x = hi * 16 + lo`` with the
+  high nibble *arithmetic*-shifted (``hi in [-8, 8)``) and the low nibble
+  unsigned (``lo in [0, 16)``).  This keeps both planes representable in
+  int8 and makes the two-pass nibble matmul exact for signed operands.
+
+Everything here is pure ``jnp`` and shape-polymorphic; the Pallas kernels
+in ``repro.kernels`` reuse these helpers inside kernel bodies (they are
+traceable on any backend, including the Pallas interpreter).
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = [
+    "split_nibbles_unsigned",
+    "split_nibbles_signed",
+    "combine_nibbles",
+    "pl_scale",
+    "pl_recipe_table",
+    "pl_adder_count",
+    "pack_int4",
+    "unpack_int4",
+]
+
+
+# ---------------------------------------------------------------------------
+# Nibble decomposition
+# ---------------------------------------------------------------------------
+
+def split_nibbles_unsigned(x):
+    """Split unsigned 8-bit values into (lo, hi) nibbles, both in [0, 16).
+
+    ``x`` may be any integer dtype holding values in [0, 256).
+    Returns int32 planes so downstream shift-add arithmetic cannot wrap.
+    """
+    x = x.astype(jnp.int32) & 0xFF
+    lo = x & 0xF
+    hi = (x >> 4) & 0xF
+    return lo, hi
+
+
+def split_nibbles_signed(x):
+    """Split signed int8 values into (lo, hi): ``x == hi * 16 + lo``.
+
+    ``lo`` is the unsigned low nibble in [0, 16); ``hi`` is the
+    arithmetically shifted high nibble in [-8, 8).  Exact for all int8.
+    """
+    x = x.astype(jnp.int32)
+    lo = x & 0xF
+    hi = (x - lo) >> 4  # arithmetic shift; exact since x - lo is a multiple of 16
+    return lo, hi
+
+
+def combine_nibbles(lo, hi):
+    """Inverse of the splits above: ``hi * 16 + lo`` in int32."""
+    return hi.astype(jnp.int32) * 16 + lo.astype(jnp.int32)
+
+
+# ---------------------------------------------------------------------------
+# Precompute logic (PL): k * A as fixed shift-and-add recipes, k in [0, 16)
+# ---------------------------------------------------------------------------
+
+# The paper's Fig. 2(b) table: each nibble value selects a structured
+# combination of fixed shifts of A.  Add-only recipes (no Booth-style
+# subtraction) — the recipe for k is exactly the set-bit expansion of k,
+# which is what "structured combination of fixed shifts and limited
+# additions" synthesises to.  Shift amounts per nibble value:
+_PL_RECIPES: list[tuple[int, ...]] = [
+    (),            # 0:  0
+    (0,),          # 1:  A
+    (1,),          # 2:  A<<1
+    (1, 0),        # 3:  A<<1 + A
+    (2,),          # 4:  A<<2
+    (2, 0),        # 5:  A<<2 + A
+    (2, 1),        # 6:  A<<2 + A<<1
+    (2, 1, 0),     # 7:  A<<2 + A<<1 + A
+    (3,),          # 8:  A<<3
+    (3, 0),        # 9:  A<<3 + A
+    (3, 1),        # 10: A<<3 + A<<1
+    (3, 1, 0),     # 11
+    (3, 2),        # 12
+    (3, 2, 0),     # 13
+    (3, 2, 1),     # 14
+    (3, 2, 1, 0),  # 15
+]
+
+
+def pl_recipe_table() -> list[tuple[int, ...]]:
+    """The sixteen shift-and-add configurations (Fig. 2(b))."""
+    return list(_PL_RECIPES)
+
+
+def pl_adder_count(k: int) -> int:
+    """Number of two-input additions the PL block performs for nibble k.
+
+    Used by the analytical area/power model: recipe with m shifted terms
+    needs m-1 adders (shifts are free wiring in the datapath).
+    """
+    terms = len(_PL_RECIPES[k & 0xF])
+    return max(0, terms - 1)
+
+
+def pl_scale(a, k):
+    """``k * a`` computed via the shift-and-add precompute logic.
+
+    ``a``: integer array (int32 recommended).  ``k``: integer array of
+    nibble values in [0, 16), broadcastable against ``a``.
+
+    Hardware realisation: the nibble value one-hot-selects one of the 16
+    fixed recipes.  In JAX we express the same dataflow as the four
+    bit-gated shifted terms — identical arithmetic, and it lowers to
+    shifts/ands/adds only (no general multiplier), which is the point.
+    """
+    a = a.astype(jnp.int32)
+    k = k.astype(jnp.int32)
+    out = jnp.zeros(jnp.broadcast_shapes(a.shape, k.shape), jnp.int32)
+    for bit in range(4):
+        gate = (k >> bit) & 1          # is the (A << bit) term in the recipe?
+        out = out + gate * (a << bit)  # gate is 0/1: pure add of a shifted term
+    return out
+
+
+# ---------------------------------------------------------------------------
+# int4 packing (two nibbles per byte) — storage format for W4A8 weights
+# ---------------------------------------------------------------------------
+
+def pack_int4(w):
+    """Pack signed int4 values (range [-8, 8)) pairwise into int8 bytes.
+
+    ``w``: int array whose *last* dimension is even; values must be in
+    [-8, 8).  Returns int8 array with last dim halved: byte = (hi<<4)|lo
+    with lo/hi the two's-complement low nibbles of consecutive elements.
+    """
+    w = jnp.asarray(w)
+    if w.shape[-1] % 2:
+        raise ValueError("pack_int4: last dimension must be even")
+    lo = w[..., 0::2].astype(jnp.int32) & 0xF
+    hi = w[..., 1::2].astype(jnp.int32) & 0xF
+    packed = (hi << 4) | lo
+    # Map [0,256) to int8 two's complement.
+    return ((packed + 128) % 256 - 128).astype(jnp.int8)
+
+
+def unpack_int4(packed):
+    """Inverse of :func:`pack_int4`; returns int8 values in [-8, 8).
+
+    The unpacking *is* the paper's shift-based precompute: each nibble is
+    recovered with a shift and a sign-extension add — no multiplier.
+    """
+    p = packed.astype(jnp.int32) & 0xFF
+    lo = p & 0xF
+    hi = (p >> 4) & 0xF
+    # sign-extend 4-bit two's complement
+    lo = lo - ((lo >> 3) << 4)
+    hi = hi - ((hi >> 3) << 4)
+    out = jnp.stack([lo, hi], axis=-1).reshape(*packed.shape[:-1], -1)
+    return out.astype(jnp.int8)
+
+
+def pl_scale_reference(a, k):
+    """Plain-multiply oracle for :func:`pl_scale` (tests only)."""
+    return (a.astype(jnp.int32) * (k.astype(jnp.int32) & 0xF)).astype(jnp.int32)
+
+
+def numpy_pl_scale(a: np.ndarray, k: int) -> np.ndarray:
+    """NumPy mirror of the recipe dataflow, used by exhaustive tests."""
+    out = np.zeros_like(a, dtype=np.int64)
+    for shift in _PL_RECIPES[k & 0xF]:
+        out = out + (a.astype(np.int64) << shift)
+    return out

@@ -1,0 +1,123 @@
+"""Quantization substrate: symmetric int8/int4 quantization + QAT STE.
+
+The paper's multipliers operate on 8-bit (and nibble/4-bit) integers;
+this module is the bridge between the bf16 model world and that integer
+world.  Conventions:
+
+* **symmetric, zero-point-free** quantization (scale only) — matches the
+  multiplier datapaths, which have no zero-point correction adders;
+* per-tensor or per-channel (last-axis) scales;
+* int4 values live in ``[-8, 8)`` and are *stored packed* two-per-byte
+  (:func:`repro.core.nibble.pack_int4`) — the storage halving the
+  nibble decomposition buys on TPU.
+
+``fake_quant`` provides the straight-through estimator used for QAT so
+the training graph and the serving graph quantize identically.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Literal
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "QTensor",
+    "quantize",
+    "dequantize",
+    "fake_quant",
+    "abs_max_scale",
+]
+
+Granularity = Literal["per_tensor", "per_channel"]
+
+_QMAX = {8: 127.0, 4: 7.0}
+
+
+@dataclasses.dataclass
+class QTensor:
+    """An integer tensor plus its dequantization scale.
+
+    ``values`` is int8 for bits=8; for bits=4 it is int8 holding values in
+    [-8, 8) (packing to bytes is the kernel's storage concern, kept
+    orthogonal so the reference path stays readable).
+    """
+
+    values: jax.Array
+    scale: jax.Array        # f32; shape () or (..., 1) broadcastable
+    bits: int = 8
+
+    def dequantize(self) -> jax.Array:
+        return self.values.astype(jnp.float32) * self.scale
+
+    @property
+    def shape(self):
+        return self.values.shape
+
+
+jax.tree_util.register_pytree_node(
+    QTensor,
+    lambda q: ((q.values, q.scale), q.bits),
+    lambda bits, leaves: QTensor(leaves[0], leaves[1], bits),
+)
+
+
+def abs_max_scale(x, bits: int = 8,
+                  granularity: Granularity = "per_channel",
+                  axis: int = -1) -> jax.Array:
+    """Scale s.t. the abs-max of ``x`` maps to the integer max."""
+    qmax = _QMAX[bits]
+    if granularity == "per_tensor":
+        amax = jnp.max(jnp.abs(x))
+    else:
+        amax = jnp.max(jnp.abs(x), axis=axis, keepdims=True)
+    return jnp.maximum(amax, 1e-8) / qmax
+
+
+def quantize(x, bits: int = 8,
+             granularity: Granularity = "per_channel",
+             axis: int = -1,
+             scale: jax.Array | None = None) -> QTensor:
+    """Symmetric round-to-nearest quantization of a float tensor."""
+    if scale is None:
+        scale = abs_max_scale(x, bits, granularity, axis)
+    qmax = _QMAX[bits]
+    q = jnp.clip(jnp.round(x / scale), -qmax - 1, qmax).astype(jnp.int8)
+    return QTensor(q, scale.astype(jnp.float32), bits)
+
+
+def dequantize(q: QTensor) -> jax.Array:
+    return q.dequantize()
+
+
+@jax.custom_vjp
+def _ste_round(x):
+    return jnp.round(x)
+
+
+def _ste_round_fwd(x):
+    return jnp.round(x), None
+
+
+def _ste_round_bwd(_, g):
+    return (g,)  # straight-through: identity gradient
+
+
+_ste_round.defvjp(_ste_round_fwd, _ste_round_bwd)
+
+
+def fake_quant(x, bits: int = 8,
+               granularity: Granularity = "per_channel",
+               axis: int = -1) -> jax.Array:
+    """Quantize-dequantize with a straight-through gradient (QAT).
+
+    Forward is numerically identical to quantize→dequantize; backward
+    passes gradients through the rounding (clipped to the representable
+    range), so the same framework trains what it serves.
+    """
+    qmax = _QMAX[bits]
+    scale = abs_max_scale(jax.lax.stop_gradient(x), bits, granularity, axis)
+    clipped = jnp.clip(x / scale, -qmax - 1, qmax)
+    return _ste_round(clipped) * scale

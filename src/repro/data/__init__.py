@@ -1,0 +1,1 @@
+from repro.data.pipeline import DataConfig, SyntheticLM, host_batch_slice  # noqa: F401

@@ -1,0 +1,74 @@
+"""Data pipeline: deterministic synthetic token streams, host-sharded.
+
+Production shape: each host produces only its shard of the global batch
+(``host_batch_slice``), the stream is deterministic in (seed, step) so a
+restarted host reproduces exactly the batches it owes — which is what
+makes checkpoint-restart exact (no data-order drift after failover).
+
+The synthetic distribution is a Zipf-like ramp over the vocab with a
+Markov backbone so the LM loss actually decreases during the example
+training runs (unlike uniform noise).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = ["DataConfig", "SyntheticLM", "host_batch_slice"]
+
+
+@dataclasses.dataclass(frozen=True)
+class DataConfig:
+    vocab_size: int
+    seq_len: int
+    global_batch: int
+    seed: int = 1234
+
+
+def host_batch_slice(global_batch: int, host_id: int, n_hosts: int) \
+        -> tuple[int, int]:
+    """[start, size) of this host's slice of the global batch."""
+    assert global_batch % n_hosts == 0, (global_batch, n_hosts)
+    per = global_batch // n_hosts
+    return host_id * per, per
+
+
+class SyntheticLM:
+    """Deterministic synthetic LM batches: batch(step) is a pure function.
+
+    ``tokens[t+1] = (a * tokens[t] + noise) % vocab`` with step-seeded
+    noise — learnable short-range structure, zero I/O.
+    """
+
+    def __init__(self, cfg: DataConfig, host_id: int = 0, n_hosts: int = 1):
+        self.cfg = cfg
+        self.start, self.local_batch = host_batch_slice(
+            cfg.global_batch, host_id, n_hosts)
+
+    def batch(self, step: int) -> dict:
+        cfg = self.cfg
+        rng = np.random.default_rng(
+            np.uint64(cfg.seed) + np.uint64(step) * np.uint64(1_000_003)
+            + np.uint64(self.start))
+        b, s, v = self.local_batch, cfg.seq_len, cfg.vocab_size
+        first = rng.integers(0, v, (b, 1))
+        noise = rng.integers(0, 17, (b, s - 1))
+        toks = [first]
+        for t in range(s - 1):
+            toks.append((toks[-1] * 31 + noise[:, t:t + 1] + 7) % v)
+        tokens = np.concatenate(toks, axis=1).astype(np.int32)
+        return {
+            "tokens": jnp.asarray(tokens),
+            "labels": jnp.asarray(np.concatenate(
+                [tokens[:, 1:], np.full((b, 1), -1, np.int32)], axis=1)),
+        }
+
+    def __iter__(self):
+        step = 0
+        while True:
+            yield self.batch(step)
+            step += 1

@@ -1,0 +1,63 @@
+"""Gradient compression: int8 + per-tensor scale with error feedback.
+
+The paper's thesis — 8-bit integers with per-structure scales preserve
+what matters — applied to the cross-pod gradient hop.  Intra-pod
+reduce-scatter stays full precision (ICI is fast); the inter-pod
+all-reduce moves int8 (4× fewer bytes on the slow axis).
+
+Error feedback: the quantization residual is carried to the next step
+(``state``), so compression noise is unbiased over time rather than per
+step — the standard convergence-preserving trick.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["compress_tree_int8", "decompress_tree_int8",
+           "ef_compress", "compressed_bytes"]
+
+
+def compress_tree_int8(grads):
+    """Quantize every leaf to (int8 values, f32 scale).  Returns
+    (dequantized grads, compressed pytree).  The dequantized result is
+    what the optimizer consumes after the wire transfer."""
+    def comp(g):
+        g = g.astype(jnp.float32)
+        scale = jnp.maximum(jnp.max(jnp.abs(g)), 1e-12) / 127.0
+        q = jnp.clip(jnp.round(g / scale), -127, 127).astype(jnp.int8)
+        return q, scale
+
+    flat, tdef = jax.tree_util.tree_flatten(grads)
+    qs = [comp(g) for g in flat]
+    deq = tdef.unflatten([q.astype(jnp.float32) * s for q, s in qs])
+    packed = tdef.unflatten([{"q": q, "scale": s} for q, s in qs])
+    return deq, packed
+
+
+def decompress_tree_int8(packed):
+    return jax.tree_util.tree_map(
+        lambda leaf: leaf["q"].astype(jnp.float32) * leaf["scale"],
+        packed, is_leaf=lambda x: isinstance(x, dict) and "q" in x)
+
+
+def ef_compress(grads, residual):
+    """Error-feedback compression: compress (grad + residual), carry the
+    new residual.  ``residual=None`` initializes to zero."""
+    if residual is None:
+        residual = jax.tree_util.tree_map(
+            lambda g: jnp.zeros(g.shape, jnp.float32), grads)
+    corrected = jax.tree_util.tree_map(
+        lambda g, r: g.astype(jnp.float32) + r, grads, residual)
+    deq, packed = compress_tree_int8(corrected)
+    new_residual = jax.tree_util.tree_map(lambda c, d: c - d, corrected, deq)
+    return deq, packed, new_residual
+
+
+def compressed_bytes(grads) -> tuple[int, int]:
+    """(raw_bytes, compressed_bytes) for the wire-savings report."""
+    raw = sum(g.size * g.dtype.itemsize
+              for g in jax.tree_util.tree_leaves(grads))
+    comp = sum(g.size * 1 + 4 for g in jax.tree_util.tree_leaves(grads))
+    return raw, comp

@@ -1,0 +1,199 @@
+"""Public jit'd entry points for the kernels (padding, backend dispatch).
+
+``interpret`` defaults to auto: interpret-mode on CPU (validation), real
+Mosaic lowering on TPU.  All wrappers accept arbitrary (unaligned)
+shapes and pad to the block grid internally; results are exact.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.lut_matmul import lut_matmul_pallas
+from repro.kernels.nibble_matmul import (
+    nibble_matmul_pallas,
+    nibble_matmul_w4_pallas,
+)
+from repro.kernels.quant_matmul_fused import quant_matmul_fused_pallas
+
+__all__ = ["nibble_matmul", "nibble_matmul_w4", "lut_matmul",
+           "quant_matmul_fused", "flash_mha"]
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def _pad_to(x, m0, m1):
+    p0 = (-x.shape[0]) % m0
+    p1 = (-x.shape[1]) % m1
+    if p0 or p1:
+        x = jnp.pad(x, ((0, p0), (0, p1)))
+    return x
+
+
+def _flatten_leading(x):
+    """Collapse leading dims to a matrix; return (mat, unflatten)."""
+    lead = x.shape[:-1]
+    mat = x.reshape(-1, x.shape[-1])
+
+    def unflatten(y):
+        return y.reshape(*lead, y.shape[-1])
+
+    return mat, unflatten
+
+
+def nibble_matmul(x_q: jax.Array, w_q: jax.Array, *,
+                  bm: int = 128, bn: int = 128, bk: int = 128,
+                  unroll_passes: bool = True,
+                  interpret: bool | None = None) -> jax.Array:
+    """int8 (..., K) × int8 (K, N) → int32 (..., N) — the paper's kernel."""
+    if interpret is None:
+        interpret = not _on_tpu()
+    mat, unflatten = _flatten_leading(x_q)
+    m, k = mat.shape
+    n = w_q.shape[1]
+    xp = _pad_to(mat, bm, bk)
+    wp = _pad_to(w_q, bk, bn)
+    out = nibble_matmul_pallas(xp, wp, bm=bm, bn=bn, bk=bk,
+                               unroll_passes=unroll_passes,
+                               interpret=interpret)
+    return unflatten(out[:m, :n])
+
+
+def nibble_matmul_w4(x_q: jax.Array, w_packed: jax.Array, *,
+                     bm: int = 128, bn: int = 128, bk: int = 128,
+                     interpret: bool | None = None) -> jax.Array:
+    """int8 (..., K) × packed-int4 (K, N//2) → int32 (..., N)."""
+    if interpret is None:
+        interpret = not _on_tpu()
+    mat, unflatten = _flatten_leading(x_q)
+    m, k = mat.shape
+    n = 2 * w_packed.shape[1]
+    xp = _pad_to(mat, bm, bk)
+    wp = _pad_to(w_packed, bk, bn // 2)
+    out = nibble_matmul_w4_pallas(xp, wp, bm=bm, bn=bn, bk=bk,
+                                  interpret=interpret)
+    return unflatten(out[:m, :n])
+
+
+def lut_matmul(x_q: jax.Array, w_q: jax.Array, *,
+               bm: int = 128, bn: int = 128, bk: int = 128,
+               interpret: bool | None = None) -> jax.Array:
+    """int8 (..., K) × int8 (K, N) → int32 (..., N) via LUT selection."""
+    if interpret is None:
+        interpret = not _on_tpu()
+    mat, unflatten = _flatten_leading(x_q)
+    m, k = mat.shape
+    n = w_q.shape[1]
+    xp = _pad_to(mat, bm, bk)
+    wp = _pad_to(w_q, bk, bn)
+    out = lut_matmul_pallas(xp, wp, bm=bm, bn=bn, bk=bk, interpret=interpret)
+    return unflatten(out[:m, :n])
+
+
+def quant_matmul_fused(x: jax.Array, w_q: jax.Array, w_scale: jax.Array, *,
+                       bm: int = 128, bn: int = 128,
+                       out_dtype=jnp.bfloat16,
+                       interpret: bool | None = None) -> jax.Array:
+    """float (..., K) × int8 (K, N) + scales → out_dtype (..., N), fused."""
+    if interpret is None:
+        interpret = not _on_tpu()
+    mat, unflatten = _flatten_leading(x)
+    m, k = mat.shape
+    n = w_q.shape[1]
+    # K must stay whole (per-row scale exactness): pad only M and N.
+    xp = _pad_to(mat, bm, 1)
+    wp = _pad_to(w_q, 1, bn)
+    sp = _pad_to(w_scale.reshape(1, -1), 1, bn)
+    out = quant_matmul_fused_pallas(xp, wp, sp, bm=bm, bn=bn,
+                                    out_dtype=out_dtype, interpret=interpret)
+    return unflatten(out[:m, :n])
+
+
+# ---------------------------------------------------------------------------
+# Flash attention (custom VJP over the Pallas forward/backward kernels)
+# ---------------------------------------------------------------------------
+
+def _pad_seq(x, mult):
+    p = (-x.shape[1]) % mult
+    if p:
+        x = jnp.pad(x, ((0, 0), (0, p), (0, 0)))
+    return x
+
+
+def _pad_dim(x, mult):
+    p = (-x.shape[2]) % mult
+    if p:
+        x = jnp.pad(x, ((0, 0), (0, 0), (0, p)))
+    return x
+
+
+@functools.partial(jax.custom_vjp,
+                   nondiff_argnums=(3, 4, 5, 6, 7, 8))
+def flash_mha(q, k, v, scale, causal=True, window=0, softcap=0.0,
+              group=1, interpret=None):
+    """Flash attention over flat head-major layouts.
+
+    q: (B·H, Sq, d); k/v: (B·KVH, Sk, d/dv) with H = KVH·group and the
+    q heads ordered (kv_head, group) so head ``bh`` reads kv row
+    ``bh // group``.  Differentiable (custom VJP, both passes in Pallas).
+    Unaligned Sq/Sk/d are padded to the 128 grid internally.
+    """
+    o, _ = _flash_fwd_impl(q, k, v, scale, causal, window, softcap, group,
+                           interpret)
+    return o
+
+
+def _flash_fwd_impl(q, k, v, scale, causal, window, softcap, group,
+                    interpret):
+    from repro.kernels.flash_attention import flash_attention_fwd_pallas
+    if interpret is None:
+        interpret = not _on_tpu()
+    sq, sk, dv = q.shape[1], k.shape[1], v.shape[2]
+    qp, kp, vp = _pad_seq(q, 128), _pad_seq(k, 128), _pad_seq(v, 128)
+    qp, kp = _pad_dim(qp, 128), _pad_dim(kp, 128)
+    vp = _pad_dim(vp, 128)
+    o, lse = flash_attention_fwd_pallas(
+        qp, kp, vp, scale=scale, causal=causal, window=window,
+        softcap=softcap, group=group, interpret=interpret)
+    return o[:, :sq, :dv], lse[:, :sq]
+
+
+def _flash_mha_fwd(q, k, v, scale, causal, window, softcap, group,
+                   interpret):
+    o, lse = _flash_fwd_impl(q, k, v, scale, causal, window, softcap,
+                             group, interpret)
+    return o, (q, k, v, o, lse)
+
+
+def _flash_mha_bwd(scale, causal, window, softcap, group, interpret,
+                   res, do):
+    from repro.kernels.flash_attention import flash_attention_bwd_pallas
+    q, k, v, o, lse = res
+    if interpret is None:
+        interpret = not _on_tpu()
+    sq, sk = q.shape[1], k.shape[1]
+    d, dv = q.shape[2], v.shape[2]
+    qp, kp, vp = _pad_seq(q, 128), _pad_seq(k, 128), _pad_seq(v, 128)
+    qp, kp, vp = _pad_dim(qp, 128), _pad_dim(kp, 128), _pad_dim(vp, 128)
+    op = _pad_dim(_pad_seq(o, 128), 128)
+    dop = _pad_dim(_pad_seq(do, 128), 128)
+    lsep = jnp.pad(lse, ((0, 0), (0, (-sq) % 128)),
+                   constant_values=0.0)
+    dq, dk_h, dv_h = flash_attention_bwd_pallas(
+        qp, kp, vp, op, lsep, dop, scale=scale, causal=causal,
+        window=window, softcap=softcap, group=group, interpret=interpret)
+    dq = dq[:, :sq, :d].astype(q.dtype)
+    # fold per-q-head dk/dv back onto the kv heads (sum over the group)
+    bh = q.shape[0]
+    bkv = k.shape[0]
+    dk_h = dk_h[:, :sk, :d].reshape(bkv, group, sk, d).sum(1)
+    dv_h = dv_h[:, :sk, :dv].reshape(bkv, group, sk, dv).sum(1)
+    return dq, dk_h.astype(k.dtype), dv_h.astype(v.dtype)
+
+
+flash_mha.defvjp(_flash_mha_fwd, _flash_mha_bwd)

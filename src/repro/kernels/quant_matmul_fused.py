@@ -1,0 +1,79 @@
+"""Pallas TPU kernel: fused quantize → nibble-matmul → dequantize.
+
+The deployment hot path: bf16 activations in, bf16 activations out, with
+the whole integer pipeline — per-row symmetric int8 quantization, the
+two nibble MXU passes, and the scale fold — inside one kernel, so the
+int8 planes and int32 accumulator never touch HBM.
+
+Tiling: the K dimension is kept whole inside the block (bk = K) so the
+per-row abs-max is exact; the grid runs over (M/bm, N/bn).  For the
+d_model sizes in the model zoo (≤ 8192) the working set is
+bm·K·2 (x, bf16) + K·bn (w, int8) + bm·bn·4 (acc) ≈ 2–3 MiB at the
+128-block defaults — comfortably inside a v5e core's 16 MiB VMEM.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+__all__ = ["quant_matmul_fused_pallas"]
+
+
+def _fused_kernel(x_ref, w_ref, ws_ref, o_ref):
+    x = x_ref[...].astype(jnp.float32)                  # (bm, K)
+    w = w_ref[...]                                      # (K, bn) int8
+    w_scale = ws_ref[...].astype(jnp.float32)           # (1, bn)
+
+    # --- per-row symmetric int8 quantization (exact: full K in block) ---
+    amax = jnp.maximum(jnp.max(jnp.abs(x), axis=-1, keepdims=True), 1e-8)
+    x_scale = amax / 127.0
+    x_q = jnp.clip(jnp.round(x / x_scale), -128, 127).astype(jnp.int32)
+
+    # --- the paper's two nibble passes ----------------------------------
+    lo = x_q & 0xF
+    hi = (x_q - lo) >> 4
+
+    def mxu_pass(plane):
+        return jax.lax.dot_general(
+            plane.astype(jnp.int8), w,
+            (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.int32)
+
+    acc = mxu_pass(lo) + (mxu_pass(hi) << 4)
+
+    # --- dequantize with folded scales -----------------------------------
+    o_ref[...] = (acc.astype(jnp.float32) * x_scale * w_scale) \
+        .astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "interpret",
+                                             "out_dtype"))
+def quant_matmul_fused_pallas(x: jax.Array, w_q: jax.Array,
+                              w_scale: jax.Array, *,
+                              bm: int = 128, bn: int = 128,
+                              out_dtype=jnp.bfloat16,
+                              interpret: bool = True) -> jax.Array:
+    """bf16/f32 (M,K) × int8 (K,N) with (1,N) f32 scales → out_dtype (M,N)."""
+    m, k = x.shape
+    k2, n = w_q.shape
+    assert k == k2
+    assert m % bm == 0 and n % bn == 0
+    w_scale = w_scale.reshape(1, n).astype(jnp.float32)
+
+    grid = (m // bm, n // bn)
+    return pl.pallas_call(
+        _fused_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, k), lambda i, j: (i, 0)),
+            pl.BlockSpec((k, bn), lambda i, j: (0, j)),
+            pl.BlockSpec((1, bn), lambda i, j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), out_dtype),
+        interpret=interpret,
+    )(x, w_q, w_scale)

@@ -1,0 +1,67 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+Each ``*_ref`` function defines the *semantics* its kernel must match
+bit-exactly (integer kernels) or to float tolerance (dequant kernels).
+Tests sweep shapes/dtypes and assert against these.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.nibble import split_nibbles_signed, unpack_int4
+
+__all__ = [
+    "nibble_matmul_ref",
+    "nibble_matmul_w4_ref",
+    "lut_matmul_ref",
+    "quant_dequant_matmul_ref",
+]
+
+
+def _int_dot(a, b):
+    return jax.lax.dot_general(a, b, (((a.ndim - 1,), (0,)), ((), ())),
+                               preferred_element_type=jnp.int32)
+
+
+def nibble_matmul_ref(x_q: jax.Array, w_q: jax.Array) -> jax.Array:
+    """int8 (M,K) × int8 (K,N) → int32 (M,N), exact."""
+    return _int_dot(x_q.astype(jnp.int32), w_q.astype(jnp.int32))
+
+
+def nibble_matmul_w4_ref(x_q: jax.Array, w_packed: jax.Array) -> jax.Array:
+    """int8 (M,K) × packed-int4 (K, N//2) → int32 (M,N), exact.
+
+    The packed weight holds two int4 values per byte along the output
+    dimension; the oracle unpacks and does the exact integer dot.
+    """
+    w = unpack_int4(w_packed)  # (K, N) int8 in [-8, 8)
+    return _int_dot(x_q.astype(jnp.int32), w.astype(jnp.int32))
+
+
+def lut_matmul_ref(x_q: jax.Array, w_q: jax.Array) -> jax.Array:
+    """Same product as nibble_matmul_ref — the LUT path changes the
+    dataflow (precompute k·W table + select), not the mathematics."""
+    return nibble_matmul_ref(x_q, w_q)
+
+
+def quant_dequant_matmul_ref(x: jax.Array, w_q: jax.Array,
+                             w_scale: jax.Array) -> jax.Array:
+    """Fused quantize→nibble-matmul→dequant oracle.
+
+    ``x``: float (M,K); quantized per-row symmetric int8 inside.
+    ``w_q``: int8 (K,N); ``w_scale``: (1,N) or () f32.
+    Returns float32 (M,N).
+    """
+    amax = jnp.maximum(jnp.max(jnp.abs(x), axis=-1, keepdims=True), 1e-8)
+    x_scale = amax / 127.0
+    x_q = jnp.clip(jnp.round(x / x_scale), -128, 127).astype(jnp.int8)
+    acc = nibble_matmul_ref(x_q, w_q)
+    return acc.astype(jnp.float32) * x_scale * w_scale
+
+
+def nibble_planes_ref(x_q: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """The (lo, hi) int8 planes the kernels split activations into."""
+    lo, hi = split_nibbles_signed(x_q)
+    return lo.astype(jnp.int8), hi.astype(jnp.int8)

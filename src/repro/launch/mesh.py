@@ -1,0 +1,33 @@
+"""Production meshes.
+
+Functions, not module constants — importing this module never touches
+jax device state (the dry-run sets XLA_FLAGS *before* any jax init; the
+trainer uses whatever devices exist).
+"""
+
+from __future__ import annotations
+
+import jax
+
+__all__ = ["make_production_mesh", "make_local_mesh", "HW"]
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16×16 = 256 chips per pod; 2 pods for the multi-pod config."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_local_mesh():
+    """Whatever this process has (CPU: 1 device) as a (data, model) mesh."""
+    n = len(jax.devices())
+    return jax.make_mesh((n, 1), ("data", "model"))
+
+
+class HW:
+    """TPU v5e hardware constants used by the roofline analysis."""
+    PEAK_BF16_FLOPS = 197e12        # per chip
+    HBM_BW = 819e9                  # bytes/s per chip
+    ICI_BW = 50e9                   # bytes/s per link (~per-direction)
+    HBM_BYTES = 16 * 2 ** 30        # 16 GiB per chip

@@ -1,0 +1,97 @@
+"""The assigned input-shape grid + ``input_specs`` (ShapeDtypeStruct
+stand-ins, no allocation) for every (arch × shape) dry-run cell."""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+
+__all__ = ["SHAPES", "ShapeCase", "runnable", "skip_reason",
+           "train_input_structs", "decode_input_structs",
+           "prefill_input_structs"]
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeCase:
+    name: str
+    kind: str          # train | prefill | decode
+    seq: int
+    batch: int
+
+
+SHAPES = {
+    "train_4k": ShapeCase("train_4k", "train", 4096, 256),
+    "prefill_32k": ShapeCase("prefill_32k", "prefill", 32_768, 32),
+    "decode_32k": ShapeCase("decode_32k", "decode", 32_768, 128),
+    "long_500k": ShapeCase("long_500k", "decode", 524_288, 1),
+}
+
+# long_500k requires sub-quadratic attention: runs for the SSM and the
+# hybrid (jamba: only 1-in-8 layers hold KV); skipped for the 8 archs
+# with periodic full-attention layers (DESIGN.md §6).
+_LONG_OK = {"mamba2-780m", "jamba-v0.1-52b"}
+
+
+def skip_reason(cfg: ModelConfig, case: ShapeCase) -> str | None:
+    if case.name == "long_500k" and cfg.name not in _LONG_OK:
+        return ("full-attention layers present: 500k dense KV decode is "
+                "the mandated sub-quadratic skip (DESIGN.md §6)")
+    return None
+
+
+def runnable(cfg: ModelConfig, case: ShapeCase) -> bool:
+    return skip_reason(cfg, case) is None
+
+
+# ---------------------------------------------------------------------------
+# ShapeDtypeStruct builders (weak-type-correct, shardable, no allocation)
+# ---------------------------------------------------------------------------
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def train_input_structs(cfg: ModelConfig, case: ShapeCase) -> dict:
+    b, s = case.batch, case.seq
+    batch = {
+        "tokens": _sds((b, s), jnp.int32),
+        "labels": _sds((b, s), jnp.int32),
+    }
+    if cfg.family == "vlm":
+        batch["patch_embeds"] = _sds((b, cfg.n_patches, cfg.d_model),
+                                     jnp.bfloat16)
+    if cfg.is_encdec:
+        batch["frames"] = _sds((b, cfg.enc_seq_len, cfg.d_model),
+                               jnp.bfloat16)
+    return batch
+
+
+def prefill_input_structs(cfg: ModelConfig, case: ShapeCase) -> dict:
+    out = {"tokens": _sds((case.batch, case.seq), jnp.int32)}
+    if cfg.family == "vlm":
+        out["patch_embeds"] = _sds((case.batch, cfg.n_patches, cfg.d_model),
+                                   jnp.bfloat16)
+    if cfg.is_encdec:
+        out["frames"] = _sds((case.batch, cfg.enc_seq_len, cfg.d_model),
+                             jnp.bfloat16)
+    return out
+
+
+def decode_input_structs(cfg: ModelConfig, case: ShapeCase) -> dict:
+    """decode cells: one new token against a seq-len cache."""
+    from repro.models import init_caches
+    caches = jax.eval_shape(
+        lambda: init_caches(cfg, case.batch, case.seq))
+    out = {
+        "token": _sds((case.batch, 1), jnp.int32),
+        "caches": caches,
+        "index": _sds((), jnp.int32),
+    }
+    if cfg.is_encdec:
+        out["enc_out"] = _sds((case.batch, cfg.enc_seq_len, cfg.d_model),
+                              jnp.bfloat16)
+    return out

@@ -1,0 +1,87 @@
+"""Training launcher.
+
+    PYTHONPATH=src python -m repro.launch.train --arch gemma3-1b \
+        --steps 200 --seq 512 --batch 8 --quant qat [--reduced]
+
+``--reduced`` runs the smoke-scale variant of the arch (CPU-friendly);
+full-size configs are for real TPU meshes (the dry-run proves they
+lower/compile; actually training them here would melt the container).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config, reduced
+from repro.data import DataConfig
+from repro.optim import AdamWConfig
+from repro.train import TrainConfig
+from repro.train.trainer import Trainer, TrainerConfig
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="gemma3-1b")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--seq", type=int, default=256)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--quant", default="dense",
+                    choices=["dense", "qat"])
+    ap.add_argument("--reduced", action="store_true", default=True)
+    ap.add_argument("--full", dest="reduced", action="store_false")
+    ap.add_argument("--checkpoint-dir", default=None)
+    ap.add_argument("--checkpoint-every", type=int, default=50)
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = reduced(cfg)
+    cfg = cfg.replace(quant_mode=args.quant)
+
+    tcfg = TrainConfig(
+        optimizer=AdamWConfig(lr=args.lr),
+        microbatches=args.microbatches,
+        total_steps=args.steps,
+        warmup_steps=max(1, args.steps // 10),
+    )
+    rcfg = TrainerConfig(steps=args.steps,
+                         checkpoint_dir=args.checkpoint_dir,
+                         checkpoint_every=args.checkpoint_every)
+    dcfg = DataConfig(vocab_size=cfg.vocab_size, seq_len=args.seq,
+                      global_batch=args.batch)
+
+    extra = None
+    if cfg.family == "vlm":
+        def extra(step):
+            k = jax.random.PRNGKey(step)
+            return {"patch_embeds": jax.random.normal(
+                k, (args.batch, cfg.n_patches, cfg.d_model),
+                jnp.bfloat16) * 0.02}
+    if cfg.is_encdec:
+        def extra(step):
+            k = jax.random.PRNGKey(step)
+            return {"frames": jax.random.normal(
+                k, (args.batch, cfg.enc_seq_len, cfg.d_model),
+                jnp.bfloat16) * 0.02}
+
+    trainer = Trainer(cfg, tcfg, rcfg, dcfg, extra_batch_fn=extra)
+    history = trainer.run()
+
+    first, last = history[0]["loss"], history[-1]["loss"]
+    print(f"\nloss {first:.4f} → {last:.4f} "
+          f"({'improved' if last < first else 'NOT improved'})")
+    if args.out:
+        with open(args.out, "w") as f:
+            json.dump(history, f, indent=1)
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

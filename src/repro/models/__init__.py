@@ -1,0 +1,10 @@
+"""Model zoo: shared layers + heterogeneous-stack assembly."""
+
+from repro.models.transformer import (  # noqa: F401
+    decode_step,
+    encode,
+    forward,
+    init_caches,
+    model_init,
+    prefill,
+)

@@ -1,0 +1,102 @@
+"""Shared neural building blocks (pure-JAX functional modules).
+
+Parameters are nested dicts of arrays; every projection goes through
+``repro.core.linear`` so the paper's quantized execution modes apply
+uniformly across the zoo.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.linear import linear_apply, linear_init
+
+__all__ = ["rms_norm_init", "rms_norm", "mlp_init", "mlp_apply",
+           "embed_init", "embed_apply", "rope", "apply_rope"]
+
+
+# ---------------------------------------------------------------------------
+# RMSNorm
+# ---------------------------------------------------------------------------
+
+def rms_norm_init(dim: int) -> dict:
+    return {"scale": jnp.zeros((dim,), jnp.float32)}
+
+
+def rms_norm(params: dict, x: jax.Array, eps: float = 1e-6) -> jax.Array:
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    x = x * jax.lax.rsqrt(var + eps)
+    return (x * (1.0 + params["scale"])).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# Rotary position embedding
+# ---------------------------------------------------------------------------
+
+def rope(positions: jax.Array, head_dim: int,
+         theta: float = 10_000.0) -> tuple[jax.Array, jax.Array]:
+    """(sin, cos) tables for integer positions, shape (..., head_dim//2)."""
+    freqs = theta ** (-jnp.arange(0, head_dim // 2, dtype=jnp.float32)
+                      / (head_dim // 2))
+    angles = positions.astype(jnp.float32)[..., None] * freqs
+    return jnp.sin(angles), jnp.cos(angles)
+
+
+def apply_rope(x: jax.Array, sin: jax.Array, cos: jax.Array) -> jax.Array:
+    """x: (..., S, H, D); sin/cos: (..., S, D/2) broadcast over heads."""
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    sin = sin[..., None, :]
+    cos = cos[..., None, :]
+    return jnp.concatenate([x1 * cos - x2 * sin,
+                            x2 * cos + x1 * sin], axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# Gated MLP (SwiGLU / GeGLU)
+# ---------------------------------------------------------------------------
+
+def mlp_init(key, d_model: int, d_ff: int) -> dict:
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "gate": linear_init(k1, d_model, d_ff),
+        "up": linear_init(k2, d_model, d_ff),
+        "down": linear_init(k3, d_ff, d_model),
+    }
+
+
+def mlp_apply(params: dict, x: jax.Array, *, act: str = "silu",
+              quant_mode: str = "dense") -> jax.Array:
+    g = linear_apply(params["gate"], x, mode=quant_mode)
+    u = linear_apply(params["up"], x, mode=quant_mode)
+    if act == "gelu":
+        g = jax.nn.gelu(g.astype(jnp.float32), approximate=True).astype(x.dtype)
+    else:
+        g = jax.nn.silu(g.astype(jnp.float32)).astype(x.dtype)
+    return linear_apply(params["down"], g * u, mode=quant_mode)
+
+
+# ---------------------------------------------------------------------------
+# Token embedding (+ tied LM head)
+# ---------------------------------------------------------------------------
+
+def embed_init(key, vocab: int, d_model: int) -> dict:
+    emb = jax.random.normal(key, (vocab, d_model), jnp.float32) * 0.02
+    return {"emb": emb.astype(jnp.bfloat16)}
+
+
+def embed_apply(params: dict, tokens: jax.Array, *,
+                scale_by_sqrt_dim: bool = False) -> jax.Array:
+    x = params["emb"][tokens]
+    if scale_by_sqrt_dim:
+        x = x * jnp.sqrt(jnp.float32(x.shape[-1])).astype(x.dtype)
+    return x
+
+
+def embed_logits(params: dict, x: jax.Array) -> jax.Array:
+    """Tied LM head: x @ emb^T with f32 accumulation (no f32 copy of the
+    embedding table — ``preferred_element_type`` upcasts in the MXU)."""
+    return jnp.dot(x, params["emb"].T,
+                   preferred_element_type=jnp.float32)

@@ -1,0 +1,227 @@
+"""Mamba2 (SSD — state-space duality) mixer block.
+
+Training/prefill uses the chunked SSD algorithm: quadratic attention-like
+math *within* fixed-size chunks, linear state recurrence *across* chunks
+(lax.scan).  Decode is the O(1)-per-token recurrence on the (H, N, P)
+state — no KV growth, which is why the SSM archs own the ``long_500k``
+shape cell.
+
+Parameter layout follows mamba2: fused in_proj producing
+(z, x, B, C, dt), causal conv over (x, B, C), per-head A/D scalars,
+gated RMSNorm, out_proj.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.linear import linear_apply, linear_init
+from repro.models.layers import rms_norm, rms_norm_init
+
+__all__ = ["mamba_init", "mamba_apply", "mamba_step", "init_mamba_cache"]
+
+
+def _dims(cfg):
+    d_in = cfg.d_inner
+    h = cfg.ssm_heads
+    p = cfg.ssm_head_dim
+    g = cfg.ssm_groups
+    n = cfg.ssm_state
+    conv_ch = d_in + 2 * g * n
+    return d_in, h, p, g, n, conv_ch
+
+
+def mamba_init(key, cfg) -> dict:
+    d = cfg.d_model
+    d_in, h, p, g, n, conv_ch = _dims(cfg)
+    ks = jax.random.split(key, 4)
+    proj_out = 2 * d_in + 2 * g * n + h      # z, x, B, C, dt
+    return {
+        "in_proj": linear_init(ks[0], d, proj_out),
+        "conv_w": (jax.random.normal(ks[1], (cfg.conv_width, conv_ch),
+                                     jnp.float32) * 0.1).astype(jnp.bfloat16),
+        "conv_b": jnp.zeros((conv_ch,), jnp.bfloat16),
+        "A_log": jnp.log(jnp.arange(1, h + 1, dtype=jnp.float32)),
+        "D": jnp.ones((h,), jnp.float32),
+        "dt_bias": jnp.zeros((h,), jnp.float32),
+        "norm": rms_norm_init(d_in),
+        "out_proj": linear_init(ks[2], d_in, d),
+    }
+
+
+def _split_proj(cfg, proj):
+    d_in, h, p, g, n, _ = _dims(cfg)
+    z, xbc_dt = jnp.split(proj, [d_in], axis=-1)
+    xbc, dt = jnp.split(xbc_dt, [d_in + 2 * g * n], axis=-1)
+    return z, xbc, dt
+
+
+def _causal_conv(xbc, conv_w, conv_b, carry=None):
+    """Depthwise causal conv, width W.  carry: (B, W-1, C) history or None."""
+    w = conv_w.shape[0]
+    if carry is None:
+        pad = jnp.zeros((xbc.shape[0], w - 1, xbc.shape[-1]), xbc.dtype)
+    else:
+        pad = carry.astype(xbc.dtype)
+    xp = jnp.concatenate([pad, xbc], axis=1)
+    out = sum(xp[:, i:i + xbc.shape[1]] * conv_w[i][None, None, :]
+              for i in range(w))
+    out = jax.nn.silu((out + conv_b[None, None, :]).astype(jnp.float32))
+    new_carry = xp[:, -(w - 1):] if w > 1 else pad
+    return out.astype(xbc.dtype), new_carry
+
+
+def _segsum(a):
+    """Lower-triangular pairwise cumulative sums: out[..., i, j] =
+    sum(a[..., j+1:i+1]), -inf above the diagonal.  a: (..., L)."""
+    l = a.shape[-1]
+    cum = jnp.cumsum(a, axis=-1)
+    diff = cum[..., :, None] - cum[..., None, :]
+    mask = jnp.tril(jnp.ones((l, l), bool))
+    return jnp.where(mask, diff, -jnp.inf)
+
+
+def _ssd_chunked(x, dt, a_coef, b_in, c_in, chunk):
+    """Chunked SSD scan.
+
+    x: (B,S,H,P); dt: (B,S,H) (post-softplus); a_coef: (H,) negative;
+    b_in/c_in: (B,S,H,N) (already broadcast from groups to heads).
+    Returns y: (B,S,H,P) and final state (B,H,N,P).
+    """
+    bsz, s, h, p = x.shape
+    n = b_in.shape[-1]
+    nc = s // chunk
+    assert s % chunk == 0, (s, chunk)
+
+    def to_chunks(t):
+        return t.reshape(bsz, nc, chunk, *t.shape[2:])
+
+    xc, dtc, bc, cc = map(to_chunks, (x, dt, b_in, c_in))
+    a = dtc * a_coef[None, None, None, :]            # (B,NC,L,H) log-decay
+    a = a.transpose(0, 1, 3, 2)                      # (B,NC,H,L)
+    a_cum = jnp.cumsum(a, axis=-1)
+
+    xdt = xc * dtc[..., None]                        # dt-weighted input
+
+    # --- intra-chunk (diagonal) term -------------------------------------
+    l_mat = jnp.exp(_segsum(a))                      # (B,NC,H,L,L) lower-tri
+    y_diag = jnp.einsum("bclhn,bcshn,bchls,bcshp->bclhp",
+                        cc.astype(jnp.float32), bc.astype(jnp.float32),
+                        l_mat, xdt.astype(jnp.float32))
+
+    # --- chunk-final states -------------------------------------------------
+    decay_to_end = jnp.exp(a_cum[..., -1:] - a_cum)  # (B,NC,H,L)
+    states = jnp.einsum("bcshn,bchs,bcshp->bchnp",
+                        bc.astype(jnp.float32), decay_to_end,
+                        xdt.astype(jnp.float32))
+
+    # --- inter-chunk recurrence (scan over chunks) -----------------------
+    chunk_decay = jnp.exp(a_cum[..., -1])            # (B,NC,H)
+
+    def body(prev, inp):
+        st, dec = inp                                # (B,H,N,P), (B,H)
+        new = st + dec[..., None, None] * prev
+        return new, prev                             # emit state *entering* c
+
+    init = jnp.zeros((bsz, h, n, p), jnp.float32)
+    final, prev_states = jax.lax.scan(
+        body, init,
+        (states.transpose(1, 0, 2, 3, 4), chunk_decay.transpose(1, 0, 2)))
+    prev_states = prev_states.transpose(1, 0, 2, 3, 4)  # (B,NC,H,N,P)
+
+    # --- inter-chunk (off-diagonal) output ---------------------------------
+    y_off = jnp.einsum("bclhn,bchnp,bchl->bclhp",
+                       cc.astype(jnp.float32), prev_states,
+                       jnp.exp(a_cum))
+    y = (y_diag + y_off).reshape(bsz, s, h, p)
+    return y, final
+
+
+def mamba_apply(params, cfg, x, *, return_cache: bool = False):
+    """Full-sequence SSD pass.  Returns (out, final_cache_or_None).
+
+    With ``return_cache`` (prefill), the returned dict holds the conv
+    tail and final SSM state for decode continuation.
+    """
+    bsz, s, d = x.shape
+    d_in, h, p, g, n, conv_ch = _dims(cfg)
+    quant = cfg.quant_mode
+
+    proj = linear_apply(params["in_proj"], x, mode=quant)
+    z, xbc, dt_raw = _split_proj(cfg, proj)
+    xbc, conv_carry = _causal_conv(xbc, params["conv_w"].astype(jnp.float32),
+                                   params["conv_b"].astype(jnp.float32))
+
+    xs, b_in, c_in = jnp.split(xbc, [d_in, d_in + g * n], axis=-1)
+    xs = xs.reshape(bsz, s, h, p)
+    rep = h // g
+    b_in = jnp.repeat(b_in.reshape(bsz, s, g, n), rep, axis=2)
+    c_in = jnp.repeat(c_in.reshape(bsz, s, g, n), rep, axis=2)
+
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32)
+                         + params["dt_bias"][None, None, :])
+    a_coef = -jnp.exp(params["A_log"])
+
+    chunk = min(cfg.ssm_chunk, s)
+    if s % chunk:
+        chunk = s                                      # tiny smoke shapes
+    y, final_state = _ssd_chunked(xs, dt, a_coef, b_in, c_in, chunk)
+    y = y + params["D"][None, None, :, None] * xs.astype(jnp.float32)
+
+    y = y.reshape(bsz, s, d_in)
+    y = y * jax.nn.silu(z.astype(jnp.float32))         # gated
+    y = rms_norm(params["norm"], y.astype(x.dtype), cfg.norm_eps)
+    out = linear_apply(params["out_proj"], y, mode=quant)
+
+    new_cache = None
+    if return_cache:
+        new_cache = {"conv": conv_carry.astype(jnp.bfloat16),
+                     "ssm": final_state.astype(jnp.float32)}
+    return out, new_cache
+
+
+def init_mamba_cache(cfg, batch: int) -> dict:
+    d_in, h, p, g, n, conv_ch = _dims(cfg)
+    return {
+        "conv": jnp.zeros((batch, cfg.conv_width - 1, conv_ch), jnp.bfloat16),
+        "ssm": jnp.zeros((batch, h, n, p), jnp.float32),
+    }
+
+
+def mamba_step(params, cfg, x, cache):
+    """Single-token decode: O(1) state update.  x: (B, 1, D)."""
+    bsz = x.shape[0]
+    d_in, h, p, g, n, conv_ch = _dims(cfg)
+    quant = cfg.quant_mode
+
+    proj = linear_apply(params["in_proj"], x, mode=quant)
+    z, xbc, dt_raw = _split_proj(cfg, proj)
+    xbc, conv_carry = _causal_conv(
+        xbc, params["conv_w"].astype(jnp.float32),
+        params["conv_b"].astype(jnp.float32), carry=cache["conv"])
+
+    xs, b_in, c_in = jnp.split(xbc[:, 0], [d_in, d_in + g * n], axis=-1)
+    xs = xs.reshape(bsz, h, p).astype(jnp.float32)
+    rep = h // g
+    b_in = jnp.repeat(b_in.reshape(bsz, g, n), rep, axis=1) \
+        .astype(jnp.float32)
+    c_in = jnp.repeat(c_in.reshape(bsz, g, n), rep, axis=1) \
+        .astype(jnp.float32)
+
+    dt = jax.nn.softplus(dt_raw[:, 0].astype(jnp.float32)
+                         + params["dt_bias"][None, :])        # (B,H)
+    a_coef = -jnp.exp(params["A_log"])
+    decay = jnp.exp(dt * a_coef[None, :])                     # (B,H)
+
+    state = cache["ssm"]
+    state = decay[..., None, None] * state \
+        + jnp.einsum("bhn,bh,bhp->bhnp", b_in, dt, xs)
+    y = jnp.einsum("bhn,bhnp->bhp", c_in, state) \
+        + params["D"][None, :, None] * xs
+
+    y = y.reshape(bsz, 1, d_in)
+    y = y * jax.nn.silu(z.astype(jnp.float32))
+    y = rms_norm(params["norm"], y.astype(x.dtype), cfg.norm_eps)
+    out = linear_apply(params["out_proj"], y, mode=quant)
+    return out, {"conv": conv_carry.astype(jnp.bfloat16), "ssm": state}

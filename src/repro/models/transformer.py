@@ -1,0 +1,408 @@
+"""Model assembly: heterogeneous layer stacks, scan-over-blocks, caches.
+
+The layer stack is ``prefix + block×n + suffix`` (configs/base.py); the
+repeated blocks run under ``jax.lax.scan`` with parameters stacked on a
+leading block axis — compile time stays flat in depth (one HLO body per
+distinct block), which is what makes the 61-layer deepseek dry-run
+tractable.  Heterogeneous layers *within* a block (gemma3's 5 local + 1
+global, jamba's mamba/attn + mlp/moe interleave) are unrolled inside the
+scan body.
+
+Three entry points per model, matching the dry-run shapes:
+* ``forward``      — full-sequence logits (training);
+* ``prefill``      — full-sequence pass that also returns decode caches;
+* ``decode_step``  — one token against the caches.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import LayerSpec, ModelConfig
+from repro.models.attention import (
+    attn_apply,
+    attn_init,
+    init_kv_cache,
+    init_mla_cache,
+    mla_apply,
+    mla_init,
+)
+from repro.models.layers import (
+    embed_apply,
+    embed_init,
+    embed_logits,
+    mlp_apply,
+    mlp_init,
+    rms_norm,
+    rms_norm_init,
+)
+from repro.models.mamba import (
+    init_mamba_cache,
+    mamba_apply,
+    mamba_init,
+    mamba_step,
+)
+from repro.models.moe import moe_apply, moe_init
+
+__all__ = ["model_init", "forward", "prefill", "decode_step", "init_caches",
+           "encode", "unrolled_blocks"]
+
+# When True, the block stack is a Python loop instead of lax.scan, so the
+# compiled HLO contains every layer body.  Used by the dry-run cost pass:
+# XLA cost_analysis excludes while-loop bodies (measured: gemma-7b flops
+# identical at 1, 2 and 3 scanned blocks), so scanned programs are costed
+# by lowering 1- and 2-block *unrolled* variants and extrapolating.
+_UNROLL_BLOCKS = False
+
+import contextlib
+
+
+@contextlib.contextmanager
+def unrolled_blocks():
+    global _UNROLL_BLOCKS
+    prev, _UNROLL_BLOCKS = _UNROLL_BLOCKS, True
+    try:
+        yield
+    finally:
+        _UNROLL_BLOCKS = prev
+
+
+# ---------------------------------------------------------------------------
+# Single layer
+# ---------------------------------------------------------------------------
+
+def _layer_init(key, cfg: ModelConfig, spec: LayerSpec, *,
+                cross: bool = False) -> dict:
+    ks = jax.random.split(key, 4)
+    p: dict[str, Any] = {"mixer_norm": rms_norm_init(cfg.d_model)}
+    if spec.mixer == "attn":
+        if spec.attn_kind == "mla":
+            p["attn"] = mla_init(ks[0], cfg)
+        else:
+            p["attn"] = attn_init(ks[0], cfg)
+    elif spec.mixer == "mamba":
+        p["mamba"] = mamba_init(ks[0], cfg)
+    if cross:
+        p["cross_norm"] = rms_norm_init(cfg.d_model)
+        p["cross"] = attn_init(ks[2], cfg)
+    if spec.ffn != "none":
+        p["ffn_norm"] = rms_norm_init(cfg.d_model)
+        if spec.ffn == "moe":
+            p["moe"] = moe_init(ks[1], cfg)
+        else:
+            p["mlp"] = mlp_init(ks[1], cfg.d_model, cfg.d_ff)
+    return p
+
+
+def _layer_apply(params, cfg: ModelConfig, spec: LayerSpec, x, *,
+                 positions, cache=None, cache_index=None, enc_out=None,
+                 causal=True, mode="train"):
+    """Returns (x, new_cache, aux_loss)."""
+    aux = jnp.zeros((), jnp.float32)
+    new_cache: dict = {}
+    cache = cache or {}
+
+    if spec.mixer == "attn":
+        h = rms_norm(params["mixer_norm"], x, cfg.norm_eps)
+        if spec.attn_kind == "mla":
+            out, c = mla_apply(params["attn"], cfg, h, positions=positions,
+                               cache=cache.get("attn"),
+                               cache_index=cache_index,
+                               return_cache=(mode == "prefill"))
+        else:
+            out, c = attn_apply(params["attn"], cfg, h, positions=positions,
+                                kind=spec.attn_kind,
+                                cache=cache.get("attn"),
+                                cache_index=cache_index, causal=causal,
+                                return_cache=(mode == "prefill"))
+        if c is not None:
+            new_cache["attn"] = c
+        x = x + out
+    elif spec.mixer == "mamba":
+        h = rms_norm(params["mixer_norm"], x, cfg.norm_eps)
+        if mode == "decode":
+            out, c = mamba_step(params["mamba"], cfg, h, cache["mamba"])
+            new_cache["mamba"] = c
+        else:
+            out, c = mamba_apply(params["mamba"], cfg, h,
+                                 return_cache=(mode == "prefill"))
+            if c is not None:
+                new_cache["mamba"] = c
+        x = x + out
+
+    if "cross" in params and enc_out is not None:
+        h = rms_norm(params["cross_norm"], x, cfg.norm_eps)
+        out, _ = attn_apply(params["cross"], cfg, h, positions=positions,
+                            kv_source=enc_out, causal=False)
+        x = x + out
+
+    if spec.ffn != "none":
+        h = rms_norm(params["ffn_norm"], x, cfg.norm_eps)
+        if spec.ffn == "moe":
+            out, aux = moe_apply(params["moe"], cfg, h)
+        else:
+            out = mlp_apply(params["mlp"], h, act=cfg.act,
+                            quant_mode=cfg.quant_mode)
+        x = x + out
+    return x, new_cache, aux
+
+
+# ---------------------------------------------------------------------------
+# Stack = prefix + scan(blocks) + suffix
+# ---------------------------------------------------------------------------
+
+def _stack_init(key, cfg: ModelConfig, *, cross: bool = False) -> dict:
+    n_blk = cfg.n_blocks
+    keys = jax.random.split(key, 3)
+
+    prefix = [
+        _layer_init(k, cfg, spec, cross=cross)
+        for k, spec in zip(jax.random.split(keys[0],
+                                            max(1, len(cfg.prefix_pattern))),
+                           cfg.prefix_pattern)
+    ]
+    suffix = [
+        _layer_init(k, cfg, spec, cross=cross)
+        for k, spec in zip(jax.random.split(keys[2],
+                                            max(1, len(cfg.suffix_pattern))),
+                           cfg.suffix_pattern)
+    ]
+
+    # blocks: per pattern position, vmapped init over the block axis
+    blk_keys = jax.random.split(keys[1], n_blk * len(cfg.block_pattern)) \
+        .reshape(n_blk, len(cfg.block_pattern), 2)
+    blocks = {}
+    for j, spec in enumerate(cfg.block_pattern):
+        init_j = functools.partial(_layer_init, cfg=cfg, spec=spec,
+                                   cross=cross)
+        blocks[str(j)] = jax.vmap(lambda k: init_j(k))(blk_keys[:, j])
+    return {"prefix": prefix, "blocks": blocks, "suffix": suffix}
+
+
+def _stack_apply(params, cfg: ModelConfig, x, *, positions, caches=None,
+                 cache_index=None, enc_out=None, causal=True, mode="train"):
+    """Returns (x, new_caches, total_aux)."""
+    total_aux = jnp.zeros((), jnp.float32)
+    want_cache = mode in ("prefill", "decode")
+    new_caches: dict = {"prefix": [], "blocks": None, "suffix": []}
+    caches = caches or {"prefix": [None] * len(cfg.prefix_pattern),
+                        "blocks": None,
+                        "suffix": [None] * len(cfg.suffix_pattern)}
+
+    from repro.distributed.sharding import maybe_shard
+
+    def run_layer(p, spec, x, cache):
+        x = maybe_shard(x, "activation")   # pin (dp, ∅, ∅) between layers
+        return _layer_apply(p, cfg, spec, x, positions=positions,
+                            cache=cache, cache_index=cache_index,
+                            enc_out=enc_out, causal=causal, mode=mode)
+
+    # prefix/suffix layers run OUTSIDE the scanned-and-checkpointed
+    # blocks; without their own remat, all their attention internals
+    # (f32 probability chunks: ~34 GiB per chunk on deepseek's MLA
+    # prefix) are saved for backward.
+    fixed_layer = run_layer
+    if cfg.remat and mode == "train":
+        fixed_layer = jax.checkpoint(run_layer, prevent_cse=False,
+                                     static_argnums=(1,))
+
+    for p, spec, c in zip(params["prefix"], cfg.prefix_pattern,
+                          caches["prefix"]):
+        x, nc, aux = fixed_layer(p, spec, x, c)
+        total_aux += aux
+        new_caches["prefix"].append(nc)
+
+    # --- scanned blocks -----------------------------------------------------
+    if cfg.n_blocks:
+        def block_body(carry, xs):
+            h, aux_acc = carry
+            blk_params, blk_caches = xs
+            blk_new = {}
+            for j, spec in enumerate(cfg.block_pattern):
+                c = blk_caches[str(j)] if blk_caches is not None else None
+                h, nc, aux = run_layer(blk_params[str(j)], spec, h, c)
+                aux_acc += aux
+                blk_new[str(j)] = nc
+            return (h, aux_acc), (blk_new if want_cache else 0)
+
+        body = block_body
+        if cfg.remat and mode == "train":
+            body = jax.checkpoint(block_body, prevent_cse=False)
+
+        xs = (params["blocks"], caches["blocks"])
+        if _UNROLL_BLOCKS:
+            emitted = []
+            carry = (x, total_aux)
+            for i in range(cfg.n_blocks):
+                xs_i = jax.tree_util.tree_map(lambda a: a[i], xs)
+                carry, y = body(carry, xs_i)
+                emitted.append(y)
+            (x, total_aux) = carry
+            blk_caches_out = (jax.tree_util.tree_map(
+                lambda *ys: jnp.stack(ys), *emitted)
+                if want_cache else None)
+        else:
+            (x, total_aux), blk_caches_out = jax.lax.scan(
+                body, (x, total_aux), xs)
+        if want_cache:
+            new_caches["blocks"] = blk_caches_out
+
+    for p, spec, c in zip(params["suffix"], cfg.suffix_pattern,
+                          caches["suffix"]):
+        x, nc, aux = fixed_layer(p, spec, x, c)
+        total_aux += aux
+        new_caches["suffix"].append(nc)
+
+    return x, (new_caches if want_cache else None), total_aux
+
+
+# ---------------------------------------------------------------------------
+# Whole models
+# ---------------------------------------------------------------------------
+
+def model_init(key, cfg: ModelConfig) -> dict:
+    ks = jax.random.split(key, 5)
+    params = {
+        "embed": embed_init(ks[0], cfg.vocab_size, cfg.d_model),
+        "stack": _stack_init(ks[1], cfg, cross=cfg.is_encdec),
+        "final_norm": rms_norm_init(cfg.d_model),
+    }
+    if not cfg.tie_embeddings:
+        from repro.core.linear import linear_init
+        params["lm_head"] = linear_init(ks[2], cfg.d_model, cfg.vocab_size)
+    if cfg.is_encdec:
+        enc_cfg = cfg.replace(n_layers=cfg.n_enc_layers,
+                              block_pattern=(LayerSpec(),),
+                              prefix_pattern=(), suffix_pattern=())
+        params["encoder"] = {
+            "stack": _stack_init(ks[3], enc_cfg),
+            "norm": rms_norm_init(cfg.d_model),
+        }
+    return params
+
+
+def _logits(params, cfg, x):
+    from repro.distributed.sharding import maybe_shard
+    x = rms_norm(params["final_norm"], x, cfg.norm_eps)
+    if cfg.tie_embeddings:
+        out = embed_logits(params["embed"], x)
+    else:
+        from repro.core.linear import linear_apply
+        out = linear_apply(params["lm_head"], x, mode="dense") \
+            .astype(jnp.float32)
+    # vocab-sharded logits: keeps the softmax/CE temporaries distributed
+    return maybe_shard(out, "logits")
+
+
+def encode(params, cfg: ModelConfig, frames: jax.Array) -> jax.Array:
+    """Encoder pass over stub-frontend frame embeddings (B, S_enc, D)."""
+    enc_cfg = cfg.replace(n_layers=cfg.n_enc_layers,
+                          block_pattern=(LayerSpec(),),
+                          prefix_pattern=(), suffix_pattern=())
+    b, s, _ = frames.shape
+    pos = jnp.broadcast_to(jnp.arange(s)[None, :], (b, s))
+    x, _, _ = _stack_apply(params["encoder"]["stack"], enc_cfg, frames,
+                           positions=pos, causal=False, mode="train")
+    return rms_norm(params["encoder"]["norm"], x, cfg.norm_eps)
+
+
+def _embed_inputs(params, cfg, tokens, extra_embeds):
+    x = embed_apply(params["embed"], tokens,
+                    scale_by_sqrt_dim=cfg.emb_scale_by_sqrt_dim)
+    if extra_embeds is not None:   # VLM stub frontend: prepend patch embeds
+        x = jnp.concatenate([extra_embeds.astype(x.dtype), x], axis=1)
+    return x
+
+
+def forward(params, cfg: ModelConfig, tokens, *, extra_embeds=None,
+            frames=None):
+    """Training logits.  tokens: (B, S) int32.
+
+    * VLM: ``extra_embeds`` (B, P, D) prepended (logits cover P+S).
+    * enc-dec: ``frames`` (B, S_enc, D) run through the encoder first.
+    """
+    enc_out = encode(params, cfg, frames) if frames is not None else None
+    x = _embed_inputs(params, cfg, tokens, extra_embeds)
+    b, s, _ = x.shape
+    pos = jnp.broadcast_to(jnp.arange(s)[None, :], (b, s))
+    x, _, aux = _stack_apply(params["stack"], cfg, x, positions=pos,
+                             enc_out=enc_out, mode="train")
+    return _logits(params, cfg, x), aux
+
+
+def init_caches(cfg: ModelConfig, batch: int, max_len: int) -> dict:
+    def layer_cache(spec: LayerSpec):
+        if spec.mixer == "attn":
+            if spec.attn_kind == "mla":
+                return {"attn": init_mla_cache(cfg, batch, max_len)}
+            return {"attn": init_kv_cache(cfg, batch, max_len)}
+        if spec.mixer == "mamba":
+            return {"mamba": init_mamba_cache(cfg, batch)}
+        return {}
+
+    def stacked(spec: LayerSpec):
+        one = layer_cache(spec)
+        return jax.tree_util.tree_map(
+            lambda a: jnp.broadcast_to(a[None], (cfg.n_blocks, *a.shape))
+            .copy() if cfg.n_blocks else a, one)
+
+    return {
+        "prefix": [layer_cache(s) for s in cfg.prefix_pattern],
+        "blocks": {str(j): stacked(s)
+                   for j, s in enumerate(cfg.block_pattern)}
+        if cfg.n_blocks else None,
+        "suffix": [layer_cache(s) for s in cfg.suffix_pattern],
+    }
+
+
+def prefill(params, cfg: ModelConfig, tokens, *, extra_embeds=None,
+            frames=None, max_len: int | None = None):
+    """Run the prompt, return (last-position logits, caches, enc_out)."""
+    enc_out = encode(params, cfg, frames) if frames is not None else None
+    x = _embed_inputs(params, cfg, tokens, extra_embeds)
+    b, s, _ = x.shape
+    pos = jnp.broadcast_to(jnp.arange(s)[None, :], (b, s))
+    x, caches, _ = _stack_apply(params["stack"], cfg, x, positions=pos,
+                                enc_out=enc_out, mode="prefill")
+    logits = _logits(params, cfg, x[:, -1:])
+    if max_len is not None and max_len > s:
+        caches = _grow_caches(cfg, caches, s, max_len)
+    return logits, caches, enc_out
+
+
+# Cache leaves with a sequence axis (always axis 1 after any block-stack
+# leading axis is accounted for) — padded out to the decode budget.
+_SEQ_CACHE_KEYS = {"k", "v", "c_kv", "k_rope", "k_scale", "v_scale"}
+
+
+def _grow_caches(cfg, caches, cur_len, max_len):
+    """Pad prefill KV caches out to the decode budget (key-aware: SSM
+    conv/state caches have no sequence axis and are left alone)."""
+    def pad_leaf(path, a):
+        key = path[-1].key if hasattr(path[-1], "key") else None
+        if key not in _SEQ_CACHE_KEYS:
+            return a
+        # seq axis is 1 for per-layer caches, 2 for block-stacked ones
+        axis = 1 if a.shape[1] == cur_len else 2
+        pad_width = [(0, 0)] * a.ndim
+        pad_width[axis] = (0, max_len - cur_len)
+        return jnp.pad(a, pad_width)
+
+    return jax.tree_util.tree_map_with_path(pad_leaf, caches)
+
+
+def decode_step(params, cfg: ModelConfig, token, caches, index, *,
+                enc_out=None):
+    """One decode step.  token: (B, 1) int32; index: scalar position."""
+    x = embed_apply(params["embed"], token,
+                    scale_by_sqrt_dim=cfg.emb_scale_by_sqrt_dim)
+    b = x.shape[0]
+    pos = jnp.broadcast_to(jnp.asarray(index)[None, None], (b, 1))
+    x, new_caches, _ = _stack_apply(params["stack"], cfg, x, positions=pos,
+                                    caches=caches, cache_index=index,
+                                    enc_out=enc_out, mode="decode")
+    return _logits(params, cfg, x), new_caches

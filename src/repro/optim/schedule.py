@@ -1,0 +1,23 @@
+"""LR schedules (pure functions of the step counter, scan/jit-safe)."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+__all__ = ["warmup_cosine", "warmup_constant"]
+
+
+def warmup_cosine(step, *, warmup: int = 100, total: int = 10_000,
+                  min_ratio: float = 0.1):
+    """Linear warmup → cosine decay to min_ratio.  Returns an lr *scale*."""
+    step = jnp.asarray(step, jnp.float32)
+    warm = step / jnp.maximum(warmup, 1)
+    progress = jnp.clip((step - warmup) / jnp.maximum(total - warmup, 1),
+                        0.0, 1.0)
+    cos = min_ratio + (1 - min_ratio) * 0.5 * (1 + jnp.cos(jnp.pi * progress))
+    return jnp.where(step < warmup, warm, cos)
+
+
+def warmup_constant(step, *, warmup: int = 100):
+    step = jnp.asarray(step, jnp.float32)
+    return jnp.minimum(step / jnp.maximum(warmup, 1), 1.0)

@@ -1,0 +1,1 @@
+from repro.roofline.analysis import RooflineTerms, analyze_cell, analyze_file, format_table  # noqa: F401

@@ -1,0 +1,129 @@
+"""Roofline analysis over the dry-run artifacts.
+
+Three terms per (arch × shape × mesh) cell, all in seconds:
+
+    compute    = HLO_FLOPs / (chips × peak_FLOP/s)
+    memory     = HLO_bytes / (chips × HBM_bw)
+    collective = collective_bytes / (chips × link_bw)
+
+Notes on provenance: ``cost_analysis()`` on the compiled SPMD module is
+*per-device program*; the collective bytes from the HLO text are
+likewise per-device.  So the "chips ×" division is already done by
+SPMD partitioning — we divide by 1 and document the convention.  (The
+formulas in the brief assume whole-model numbers; per-device numbers /
+per-device rates give the identical seconds.)
+
+MODEL_FLOPS = 6·N·D (dense) or 6·N_active·D (MoE) per processed token —
+the useful-work yardstick; HLO_FLOPs / chips vs MODEL_FLOPS / chips
+exposes remat/redundancy waste.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+
+from repro.launch.mesh import HW
+
+__all__ = ["RooflineTerms", "analyze_cell", "analyze_file", "format_table"]
+
+
+@dataclasses.dataclass
+class RooflineTerms:
+    arch: str
+    shape: str
+    mesh: str
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    dominant: str
+    model_flops_per_device: float
+    hlo_flops_per_device: float
+    useful_ratio: float          # MODEL_FLOPS / HLO_FLOPs (≤ ~1 is good)
+    roofline_fraction: float     # dominant-bound utilization estimate
+    note: str = ""
+
+    @property
+    def total_s(self) -> float:
+        # optimistic perfectly-overlapped lower bound = max of terms
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+
+def _chips(mesh_tag: str) -> int:
+    return 512 if "2pod" in mesh_tag else 256
+
+
+def _tokens(shape: str) -> int:
+    return {
+        "train_4k": 256 * 4096,
+        "prefill_32k": 32 * 32_768,
+        "decode_32k": 128 * 1,          # one new token per sequence
+        "long_500k": 1 * 1,
+    }[shape]
+
+
+def _model_flops(record: dict) -> float:
+    """6·N(_active)·tokens; backward ≈ 2× forward → train gets 3× 2·N·D."""
+    n = record["params_active"]
+    toks = _tokens(record["shape"])
+    if record["shape"] == "train_4k":
+        return 6.0 * n * toks
+    return 2.0 * n * toks                # inference: forward only
+
+
+def analyze_cell(record: dict) -> RooflineTerms | None:
+    if record.get("status") != "ok":
+        return None
+    chips = _chips(record["mesh"])
+    # scan-corrected numbers (see dryrun.scan_extrapolated_cost); raw
+    # cost_analysis excludes while bodies entirely.
+    flops_dev = record.get("flops_extrapolated", record["flops"])
+    bytes_dev = record.get("bytes_extrapolated", record["bytes_accessed"])
+    coll = record.get("collective_bytes_extrapolated",
+                      record.get("collective_bytes", {}))
+    coll_dev = sum(v for k, v in coll.items() if k != "n_ops")
+
+    compute_s = flops_dev / HW.PEAK_BF16_FLOPS
+    memory_s = bytes_dev / HW.HBM_BW
+    collective_s = coll_dev / HW.ICI_BW
+
+    terms = {"compute": compute_s, "memory": memory_s,
+             "collective": collective_s}
+    dominant = max(terms, key=terms.get)
+
+    model_flops = _model_flops(record) / chips
+    useful = model_flops / max(flops_dev, 1.0)
+    # roofline fraction: useful compute time over the bound step time
+    frac = (model_flops / HW.PEAK_BF16_FLOPS) / max(max(terms.values()),
+                                                    1e-12)
+    return RooflineTerms(
+        arch=record["arch"], shape=record["shape"], mesh=record["mesh"],
+        compute_s=compute_s, memory_s=memory_s, collective_s=collective_s,
+        dominant=dominant, model_flops_per_device=model_flops,
+        hlo_flops_per_device=flops_dev, useful_ratio=useful,
+        roofline_fraction=frac)
+
+
+def analyze_file(path: str) -> list[RooflineTerms]:
+    with open(path) as f:
+        records = json.load(f)
+    out = []
+    for r in records:
+        t = analyze_cell(r)
+        if t:
+            out.append(t)
+    return out
+
+
+def format_table(terms: list[RooflineTerms]) -> str:
+    hdr = (f"{'arch':28s} {'shape':12s} {'mesh':12s} "
+           f"{'compute':>10s} {'memory':>10s} {'collect':>10s} "
+           f"{'dominant':>10s} {'useful':>7s} {'roofl%':>7s}")
+    lines = [hdr, "-" * len(hdr)]
+    for t in sorted(terms, key=lambda t: (t.mesh, t.arch, t.shape)):
+        lines.append(
+            f"{t.arch:28s} {t.shape:12s} {t.mesh:12s} "
+            f"{t.compute_s:10.4f} {t.memory_s:10.4f} "
+            f"{t.collective_s:10.4f} {t.dominant:>10s} "
+            f"{t.useful_ratio:7.3f} {100 * t.roofline_fraction:6.1f}%")
+    return "\n".join(lines)

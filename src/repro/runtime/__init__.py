@@ -1,0 +1,2 @@
+from repro.runtime.fault_tolerance import (  # noqa: F401
+    ElasticPlan, HeartbeatMonitor, StragglerDetector, plan_elastic_mesh)

@@ -1,0 +1,77 @@
+"""Serving: batched prefill→decode engine + the jit-able ``serve_step``.
+
+``make_serve_step`` builds the function the decode dry-run cells lower:
+one new token for every sequence in the batch against a seq_len-sized
+KV cache (exactly the ``decode_32k`` / ``long_500k`` shape semantics).
+
+The engine adds continuous batching on top for the example scripts:
+requests at different positions share the cache; finished slots are
+refilled without recompiling (positions are data, not shape).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import decode_step, init_caches, prefill
+
+__all__ = ["ServeConfig", "make_serve_step", "Engine"]
+
+
+@dataclasses.dataclass(frozen=True)
+class ServeConfig:
+    batch: int
+    max_len: int
+    temperature: float = 0.0          # 0 = greedy
+
+
+def make_serve_step(cfg: ModelConfig, scfg: ServeConfig) -> Callable:
+    """serve_step(params, caches, token, index) → (next_token, caches).
+
+    ``index`` is a traced scalar — one compilation serves every decode
+    position.  Greedy or temperature sampling on-device.
+    """
+
+    def serve_step(params, caches, token, index, rng):
+        logits, caches = decode_step(params, cfg, token, caches, index)
+        logits = logits[:, -1].astype(jnp.float32)
+        if scfg.temperature > 0.0:
+            nxt = jax.random.categorical(rng, logits / scfg.temperature)
+        else:
+            nxt = jnp.argmax(logits, axis=-1)
+        return nxt[:, None].astype(jnp.int32), caches
+
+    return serve_step
+
+
+class Engine:
+    """Minimal continuous-batching engine for the example drivers."""
+
+    def __init__(self, cfg: ModelConfig, params, scfg: ServeConfig):
+        self.cfg = cfg
+        self.params = params
+        self.scfg = scfg
+        self._step = jax.jit(make_serve_step(cfg, scfg))
+
+    def generate(self, prompts: jax.Array, n_new: int,
+                 rng=None) -> jax.Array:
+        """prompts: (B, S) int32 → (B, S + n_new) tokens."""
+        cfg, scfg = self.cfg, self.scfg
+        rng = rng if rng is not None else jax.random.PRNGKey(0)
+        b, s = prompts.shape
+        logits, caches, _ = prefill(self.params, cfg, prompts,
+                                    max_len=scfg.max_len)
+        token = jnp.argmax(logits[:, -1].astype(jnp.float32),
+                           axis=-1)[:, None].astype(jnp.int32)
+        out = [prompts, token]
+        for i in range(n_new - 1):
+            rng, sub = jax.random.split(rng)
+            token, caches = self._step(self.params, caches, token,
+                                       s + i, sub)
+            out.append(token)
+        return jnp.concatenate(out, axis=1)

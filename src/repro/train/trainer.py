@@ -1,0 +1,100 @@
+"""Trainer: the integration loop — data, step, checkpoint, fault hooks.
+
+Single-host on CPU here, but structured exactly like the multi-pod
+driver: deterministic data shards, checkpoint-restart that reproduces
+the exact batch sequence, heartbeat/straggler hooks around the step.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable
+
+import jax
+import numpy as np
+
+from repro.checkpoint import Checkpointer
+from repro.configs.base import ModelConfig
+from repro.data import DataConfig, SyntheticLM
+from repro.models import model_init
+from repro.optim import adamw_init
+from repro.runtime import HeartbeatMonitor, StragglerDetector
+from repro.train.step import TrainConfig, make_train_step
+
+__all__ = ["TrainerConfig", "Trainer"]
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainerConfig:
+    steps: int = 100
+    log_every: int = 10
+    checkpoint_every: int = 50
+    checkpoint_dir: str | None = None
+    seed: int = 0
+    host_id: int = 0
+    n_hosts: int = 1
+
+
+class Trainer:
+    def __init__(self, cfg: ModelConfig, tcfg: TrainConfig,
+                 rcfg: TrainerConfig, dcfg: DataConfig,
+                 extra_batch_fn: Callable | None = None):
+        self.cfg, self.tcfg, self.rcfg = cfg, tcfg, rcfg
+        self.data = SyntheticLM(dcfg, rcfg.host_id, rcfg.n_hosts)
+        self.extra_batch_fn = extra_batch_fn
+        self.step_fn = jax.jit(make_train_step(cfg, tcfg),
+                               donate_argnums=(0, 1))
+        self.ckpt = (Checkpointer(rcfg.checkpoint_dir)
+                     if rcfg.checkpoint_dir else None)
+        self.heartbeat = HeartbeatMonitor(rcfg.n_hosts)
+        self.straggler = StragglerDetector(rcfg.n_hosts)
+
+        key = jax.random.PRNGKey(rcfg.seed)
+        self.params = model_init(key, cfg)
+        self.opt_state = adamw_init(self.params, tcfg.optimizer)
+        self.start_step = 0
+
+        if self.ckpt and self.ckpt.latest_step() is not None:
+            state = {"params": self.params, "opt": self.opt_state}
+            state, step = self.ckpt.restore(state)
+            self.params = state["params"]
+            self.opt_state = state["opt"]
+            self.start_step = step
+            print(f"[trainer] restored checkpoint at step {step}")
+
+    def _batch(self, step: int) -> dict:
+        batch = self.data.batch(step)
+        if self.extra_batch_fn:
+            batch.update(self.extra_batch_fn(step))
+        return batch
+
+    def run(self) -> list[dict]:
+        history = []
+        rcfg = self.rcfg
+        for step in range(self.start_step, rcfg.steps):
+            t0 = time.time()
+            batch = self._batch(step)
+            self.params, self.opt_state, metrics = self.step_fn(
+                self.params, self.opt_state, batch)
+            dt = time.time() - t0
+
+            self.heartbeat.beat(rcfg.host_id, time.time())
+            self.straggler.record(rcfg.host_id, dt)
+
+            if step % rcfg.log_every == 0 or step == rcfg.steps - 1:
+                m = {k: float(np.asarray(v)) for k, v in metrics.items()}
+                m.update(step=step, step_time_s=round(dt, 3))
+                history.append(m)
+                print(f"[trainer] step {step:5d} loss={m['loss']:.4f} "
+                      f"gnorm={m['grad_norm']:.3f} {dt*1e3:.0f} ms")
+
+            if (self.ckpt and rcfg.checkpoint_every
+                    and (step + 1) % rcfg.checkpoint_every == 0):
+                self.ckpt.save(step + 1, {"params": self.params,
+                                          "opt": self.opt_state},
+                               host_id=rcfg.host_id,
+                               n_hosts=rcfg.n_hosts)
+        if self.ckpt:
+            self.ckpt.wait()
+        return history

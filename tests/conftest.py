@@ -1,0 +1,9 @@
+"""Pytest config: no XLA device-count fakery here — smoke tests and
+benches must see the real (single) CPU device; only the dry-run and
+explicitly-marked subprocess tests use placeholder device counts."""
+
+import pytest
+
+
+def pytest_configure(config):
+    config.addinivalue_line("markers", "slow: long-running integration test")

@@ -1,0 +1,175 @@
+"""Attention correctness: GQA grouping, sliding window, chunk invariance,
+RoPE properties, MLA latent cache equivalence."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.configs import get_config, reduced
+from repro.models.attention import (
+    attention_core,
+    attn_apply,
+    attn_init,
+    mla_apply,
+    mla_init,
+    unrolled_chunks,
+)
+from repro.models.layers import apply_rope, rope
+
+
+def _naive_attention(q, k, v, q_pos, k_pos, scale, causal, window):
+    """O(S²) reference with explicit head repetition."""
+    b, sq, h, d = q.shape
+    kvh = k.shape[2]
+    rep = h // kvh
+    k_full = np.repeat(np.asarray(k, np.float32), rep, axis=2)
+    v_full = np.repeat(np.asarray(v, np.float32), rep, axis=2)
+    qn = np.asarray(q, np.float32)
+    out = np.zeros((b, sq, h, v.shape[-1]), np.float32)
+    for bi in range(b):
+        for hi in range(h):
+            logits = qn[bi, :, hi] @ k_full[bi, :, hi].T * scale
+            for i in range(sq):
+                for j in range(k.shape[1]):
+                    if causal and k_pos[bi, j] > q_pos[bi, i]:
+                        logits[i, j] = -1e30
+                    if window and q_pos[bi, i] - k_pos[bi, j] >= window:
+                        logits[i, j] = -1e30
+            p = np.exp(logits - logits.max(-1, keepdims=True))
+            p /= p.sum(-1, keepdims=True)
+            out[bi, :, hi] = p @ v_full[bi, :, hi]
+    return out
+
+
+@pytest.mark.parametrize("h,kvh", [(4, 4), (4, 2), (4, 1)])
+@pytest.mark.parametrize("causal,window", [(True, 0), (True, 3), (False, 0)])
+def test_attention_core_vs_naive(h, kvh, causal, window):
+    key = jax.random.PRNGKey(0)
+    b, sq, sk, d = 2, 6, 6, 8
+    q = jax.random.normal(key, (b, sq, h, d), jnp.float32)
+    k = jax.random.normal(jax.random.PRNGKey(1), (b, sk, kvh, d))
+    v = jax.random.normal(jax.random.PRNGKey(2), (b, sk, kvh, d))
+    pos = jnp.broadcast_to(jnp.arange(sq)[None], (b, sq))
+    got = attention_core(q, k, v, pos, pos, scale=0.35, causal=causal,
+                         window=window)
+    want = _naive_attention(q, k, v, np.asarray(pos), np.asarray(pos),
+                            0.35, causal, window)
+    np.testing.assert_allclose(np.asarray(got, np.float32), want,
+                               rtol=2e-2, atol=2e-2)
+
+
+def test_query_chunking_invariance():
+    """Chunked evaluation must equal unchunked (and the unrolled cost-pass
+    variant must equal the scan variant)."""
+    key = jax.random.PRNGKey(3)
+    b, s, h, d = 1, 64, 2, 8
+    q = jax.random.normal(key, (b, s, h, d))
+    k = jax.random.normal(jax.random.PRNGKey(4), (b, s, h, d))
+    v = jax.random.normal(jax.random.PRNGKey(5), (b, s, h, d))
+    pos = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+    full = attention_core(q, k, v, pos, pos, scale=0.5, q_chunk=1024)
+    chunked = attention_core(q, k, v, pos, pos, scale=0.5, q_chunk=16)
+    np.testing.assert_allclose(np.asarray(full), np.asarray(chunked),
+                               rtol=1e-5, atol=1e-5)
+    with unrolled_chunks():
+        unrolled = attention_core(q, k, v, pos, pos, scale=0.5, q_chunk=16)
+    np.testing.assert_allclose(np.asarray(full), np.asarray(unrolled),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_sliding_window_blocks_distant_keys():
+    """A distant key must not influence the output of a local layer."""
+    cfg = reduced(get_config("gemma3-1b")).replace(sliding_window=4,
+                                                   qk_norm=False)
+    params = attn_init(jax.random.PRNGKey(0), cfg)
+    b, s = 1, 16
+    x = jax.random.normal(jax.random.PRNGKey(1), (b, s, cfg.d_model)) \
+        .astype(jnp.bfloat16)
+    pos = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+    out1, _ = attn_apply(params, cfg, x, positions=pos, kind="local")
+    # perturb position 0 hugely; outputs at positions ≥ 4 must not change
+    x2 = x.at[:, 0].set(100.0)
+    out2, _ = attn_apply(params, cfg, x2, positions=pos, kind="local")
+    d_far = float(jnp.abs(out1[:, 6:].astype(jnp.float32)
+                          - out2[:, 6:].astype(jnp.float32)).max())
+    d_near = float(jnp.abs(out1[:, 0].astype(jnp.float32)
+                           - out2[:, 0].astype(jnp.float32)).max())
+    assert d_far == 0.0
+    assert d_near > 0.0
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+def test_rope_preserves_norm():
+    x = jax.random.normal(jax.random.PRNGKey(0), (2, 8, 4, 16))
+    pos = jnp.broadcast_to(jnp.arange(8)[None], (2, 8))
+    sin, cos = rope(pos, 16)
+    y = apply_rope(x, sin, cos)
+    np.testing.assert_allclose(np.linalg.norm(np.asarray(y), axis=-1),
+                               np.linalg.norm(np.asarray(x), axis=-1),
+                               rtol=1e-5)
+
+
+@given(shift=st.integers(0, 32))
+@settings(max_examples=10, deadline=None)
+def test_rope_relative_property(shift):
+    """⟨rope(q,i), rope(k,j)⟩ depends only on i−j (translation invariance)."""
+    q = jax.random.normal(jax.random.PRNGKey(1), (1, 1, 1, 16))
+    k = jax.random.normal(jax.random.PRNGKey(2), (1, 1, 1, 16))
+
+    def dot_at(i, j):
+        sq, cq = rope(jnp.array([[i]]), 16)
+        sk, ck = rope(jnp.array([[j]]), 16)
+        return float(jnp.sum(apply_rope(q, sq, cq)
+                             * apply_rope(k, sk, ck)))
+
+    base = dot_at(5, 3)
+    shifted = dot_at(5 + shift, 3 + shift)
+    assert abs(base - shifted) < 1e-3
+
+
+# ---------------------------------------------------------------------------
+# MLA
+# ---------------------------------------------------------------------------
+
+def test_mla_cache_equivalence():
+    """Decoding from the compressed latent cache must equal the full pass
+    — the cache stores (c_kv, k_rope) only, K/V are re-expanded."""
+    cfg = reduced(get_config("deepseek-v3-671b"))
+    params = mla_init(jax.random.PRNGKey(0), cfg)
+    b, s = 1, 8
+    x = (jax.random.normal(jax.random.PRNGKey(1), (b, s, cfg.d_model))
+         * 0.5).astype(jnp.bfloat16)
+    pos = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+    full, _ = mla_apply(params, cfg, x, positions=pos)
+
+    # prefill 4, decode 4
+    out_pre, cache = mla_apply(params, cfg, x[:, :4], positions=pos[:, :4],
+                               return_cache=True)
+    from repro.models.attention import init_mla_cache
+    big = init_mla_cache(cfg, b, s)
+    big["c_kv"] = big["c_kv"].at[:, :4].set(cache["c_kv"])
+    big["k_rope"] = big["k_rope"].at[:, :4].set(cache["k_rope"])
+    outs = [np.asarray(out_pre.astype(jnp.float32))]
+    for t in range(4, s):
+        o, big = mla_apply(params, cfg, x[:, t:t + 1],
+                           positions=pos[:, t:t + 1], cache=big,
+                           cache_index=t)
+        outs.append(np.asarray(o.astype(jnp.float32)))
+    got = np.concatenate(outs, axis=1)
+    np.testing.assert_allclose(got,
+                               np.asarray(full.astype(jnp.float32)),
+                               rtol=0.06, atol=0.06)
+
+
+def test_mla_cache_is_compressed():
+    """Per-token MLA cache bytes << full K/V bytes (the MLA win)."""
+    cfg = get_config("deepseek-v3-671b")
+    mla_per_tok = cfg.kv_lora_rank + cfg.qk_rope_dim          # 576
+    full_per_tok = 2 * cfg.n_heads * (cfg.qk_nope_dim + cfg.qk_rope_dim)
+    assert mla_per_tok * 40 < full_per_tok                    # >40× smaller

@@ -1,0 +1,111 @@
+"""The analytical model must reproduce the paper's Table 2 and Fig. 4."""
+
+import numpy as np
+import pytest
+
+from repro.core import cycle_model as cm
+
+
+# ---------------------------------------------------------------------------
+# Table 2
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("arch,per", [
+    ("shift_add", 8), ("booth_radix2", 4), ("nibble_precompute", 2),
+    ("wallace", 1), ("lut_array", 1),
+])
+def test_table2_per_operand(arch, per):
+    assert cm.cycles_per_operand(arch) == per
+
+
+def test_table2_n_operand_latency():
+    # paper §III.B: 4/8/16-operand nibble arrays take 8/16/32 cycles
+    assert [cm.total_cycles("nibble_precompute", n) for n in (4, 8, 16)] \
+        == [8, 16, 32]
+    assert cm.total_cycles("shift_add", 16) == 128
+    assert cm.total_cycles("booth_radix2", 16) == 64
+    assert cm.total_cycles("wallace", 16) == 1
+    assert cm.total_cycles("lut_array", 16) == 1
+
+
+# ---------------------------------------------------------------------------
+# Fig. 4 — every number the paper reports, within the affine residual
+# ---------------------------------------------------------------------------
+
+def _check(metric, fn, tol):
+    for arch in cm.ARCHES:
+        for n, reported in zip((4, 8, 16), cm.paper_reported(metric, arch)):
+            if reported is None:
+                continue
+            model = fn(arch, n)
+            err = abs(model - reported) / reported
+            assert err < tol, (metric, arch, n, model, reported)
+
+
+def test_fig4_area_reproduction():
+    _check("area", cm.area_um2, tol=0.03)
+
+
+def test_fig4_power_reproduction():
+    _check("power", cm.power_mw, tol=0.05)
+
+
+# ---------------------------------------------------------------------------
+# The paper's headline claims
+# ---------------------------------------------------------------------------
+
+def test_headline_area_claim_169x():
+    """'up to 1.69x area reduction ... over shift-add' at 16 operands."""
+    r = cm.improvement_vs("shift_add", "nibble_precompute", "area", 16)
+    assert abs(r - 1.69) < 0.02
+
+
+def test_headline_power_claim_163x():
+    """'1.63x power improvement over shift-add' at 16 operands."""
+    r = cm.improvement_vs("shift_add", "nibble_precompute", "power", 16)
+    assert abs(r - 1.63) < 0.03
+
+
+def test_headline_vs_lut_array():
+    """'nearly 2.6x area ... savings compared to LUT-based array'.
+
+    NOTE the paper also claims 2.7x *power* vs the LUT array, but its own
+    Fig. 4(b) numbers give 0.276/0.0605 = 4.56x — the figure data wins;
+    we assert the area claim (consistent) and that power saving is at
+    least the claimed 2.7x (it is larger).  Recorded in EXPERIMENTS.md.
+    """
+    area = cm.area_um2("lut_array", 16) / cm.area_um2("nibble_precompute", 16)
+    power = cm.power_mw("lut_array", 16) / cm.power_mw("nibble_precompute", 16)
+    assert abs(area - 2.6) < 0.1
+    assert power > 2.7
+
+
+def test_crossover_nibble_beats_shift_add_only_at_scale():
+    """Fig. 4(b): nibble loses on power at N=4 (0.83x), wins from N=8."""
+    assert cm.improvement_vs("shift_add", "nibble_precompute", "power", 4) < 1.0
+    assert cm.improvement_vs("shift_add", "nibble_precompute", "power", 8) > 1.0
+    assert cm.improvement_vs("shift_add", "nibble_precompute", "power", 16) > 1.5
+
+
+def test_logic_reuse_is_the_mechanism():
+    """The nibble design's fitted shared term must dominate its per-lane
+    term relative to shift-add — that is the 'logic reuse' thesis."""
+    nib_shared, nib_lane = cm._POWER_COEF["nibble_precompute"]
+    sa_shared, sa_lane = cm._POWER_COEF["shift_add"]
+    assert nib_shared > sa_shared          # more amortised logic
+    assert nib_lane < sa_lane              # cheaper replicated lane
+
+
+def test_energy_per_product_ordering():
+    """Energy/product: nibble must beat both sequential baselines at 16."""
+    e = {a: cm.energy_per_product_pj(a, 16) for a in cm.ARCHES}
+    assert e["nibble_precompute"] < e["booth_radix2"] < e["shift_add"]
+
+
+def test_extrapolation_to_128_lanes():
+    """Abstract's 128-lane point: savings must grow monotonically with N."""
+    r16 = cm.improvement_vs("shift_add", "nibble_precompute", "power", 16)
+    r128 = cm.improvement_vs("shift_add", "nibble_precompute", "power", 128)
+    assert r128 > r16 > 1.0
+    a128 = cm.improvement_vs("shift_add", "nibble_precompute", "area", 128)
+    assert a128 > 1.69

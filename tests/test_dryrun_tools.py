@@ -1,0 +1,85 @@
+"""Unit tests for the dry-run tooling: HLO collective parser, shape
+grid/skip policy, roofline math."""
+
+import pytest
+
+from repro.configs import get_config
+from repro.launch.dryrun import collective_bytes_from_hlo
+from repro.launch.shapes import SHAPES, skip_reason
+from repro.roofline.analysis import analyze_cell
+
+HLO_SAMPLE = """
+  %all-reduce.3 = f32[1024,128]{1,0} all-reduce(%x), replica_groups=[16,16]<=[256]
+  %ag = bf16[64,2048]{1,0} all-gather(%y), channel_id=4, dimensions={0}
+  %ag2 = (bf16[32,32]{1,0}, bf16[32,32]{1,0}) all-gather-start(%z), channel_id=5
+  %agd = bf16[32,32]{1,0} all-gather-done(%ag2), channel_id=5
+  %rs = f32[512]{0} reduce-scatter(%w), channel_id=6
+  %cp = bf16[8,8]{1,0} collective-permute(%v), channel_id=7
+  %a2a = s8[16,16]{1,0} all-to-all(%u), channel_id=8
+  %dot.1 = f32[128,128]{1,0} dot(%a, %b), lhs_contracting_dims={1}
+"""
+
+
+def test_collective_parser_kinds_and_bytes():
+    out = collective_bytes_from_hlo(HLO_SAMPLE)
+    assert out["all-reduce"] == 1024 * 128 * 4
+    # plain all-gather + the -start tuple (2×32×32 bf16); -done not counted
+    assert out["all-gather"] == 64 * 2048 * 2 + 2 * 32 * 32 * 2
+    assert out["reduce-scatter"] == 512 * 4
+    assert out["collective-permute"] == 8 * 8 * 2
+    assert out["all-to-all"] == 16 * 16 * 1
+    assert out["n_ops"] == 6
+
+
+def test_collective_parser_ignores_compute_ops():
+    out = collective_bytes_from_hlo("%d = f32[4,4]{1,0} dot(%a, %b)")
+    assert out["n_ops"] == 0
+
+
+def test_shape_grid_is_the_assignment():
+    assert SHAPES["train_4k"].seq == 4096
+    assert SHAPES["train_4k"].batch == 256
+    assert SHAPES["prefill_32k"].batch == 32
+    assert SHAPES["decode_32k"].batch == 128
+    assert SHAPES["long_500k"].seq == 524_288
+
+
+@pytest.mark.parametrize("arch,expect_skip", [
+    ("mamba2-780m", False), ("jamba-v0.1-52b", False),
+    ("gemma3-1b", True), ("yi-6b", True), ("deepseek-v3-671b", True),
+    ("whisper-base", True),
+])
+def test_long_500k_skip_policy(arch, expect_skip):
+    reason = skip_reason(get_config(arch), SHAPES["long_500k"])
+    assert (reason is not None) == expect_skip
+
+
+def test_no_skips_outside_long():
+    for arch in ("gemma3-1b", "deepseek-v3-671b", "whisper-base"):
+        for shape in ("train_4k", "prefill_32k", "decode_32k"):
+            assert skip_reason(get_config(arch), SHAPES[shape]) is None
+
+
+def test_roofline_cell_math():
+    record = {
+        "status": "ok", "arch": "x", "shape": "train_4k",
+        "mesh": "1pod_16x16",
+        "flops": 1.97e12,                       # raw (ignored)
+        "bytes_accessed": 8.19e11,
+        "flops_extrapolated": 1.97e13,          # = 0.1 s at 197 TF/s
+        "bytes_extrapolated": 8.19e11,          # = 1.0 s at 819 GB/s
+        "collective_bytes_extrapolated": {"all-reduce": 5.0e10},  # 1.0 s
+        "params": 1e9, "params_active": 1e9,
+    }
+    t = analyze_cell(record)
+    assert t.compute_s == pytest.approx(0.1)
+    assert t.memory_s == pytest.approx(1.0)
+    assert t.collective_s == pytest.approx(1.0)
+    assert t.dominant in ("memory", "collective")
+    # model flops = 6e9·(256·4096)/256 chips = 2.4576e13 per device
+    assert t.model_flops_per_device == pytest.approx(6e9 * 4096, rel=1e-6)
+
+
+def test_roofline_skips_failed_cells():
+    assert analyze_cell({"status": "fail"}) is None
+    assert analyze_cell({"status": "skip"}) is None

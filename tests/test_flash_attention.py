@@ -1,0 +1,109 @@
+"""Flash-attention Pallas kernels vs the jnp oracle (fwd + custom VJP)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.ops import flash_mha
+
+
+def _oracle(q, k, v, scale, causal, window, softcap, group):
+    """Dense attention in f32 with the same GQA head mapping."""
+    bh, sq, d = q.shape
+    bkv, sk, dv = v.shape
+    kk = jnp.repeat(k, group, axis=0)
+    vv = jnp.repeat(v, group, axis=0)
+    s = jnp.einsum("bqd,bkd->bqk", q.astype(jnp.float32),
+                   kk.astype(jnp.float32)) * scale
+    if softcap:
+        s = jnp.tanh(s / softcap) * softcap
+    qpos = jnp.arange(sq)[:, None]
+    kpos = jnp.arange(sk)[None, :]
+    mask = jnp.ones((sq, sk), bool)
+    if causal:
+        mask &= kpos <= qpos
+    if window:
+        mask &= (qpos - kpos) < window
+    s = jnp.where(mask[None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bqk,bkd->bqd", p, vv.astype(jnp.float32))
+
+
+CASES = [
+    # (bh_kv, group, sq, sk, d, dv, causal, window, softcap)
+    (2, 1, 128, 128, 128, 128, True, 0, 0.0),
+    (2, 1, 256, 256, 128, 128, True, 0, 0.0),
+    (1, 4, 128, 128, 128, 128, True, 0, 0.0),      # GQA
+    (2, 1, 128, 128, 128, 128, True, 64, 0.0),     # sliding window
+    (2, 1, 128, 128, 128, 128, True, 0, 30.0),     # softcap
+    (1, 2, 96, 96, 64, 64, True, 0, 0.0),          # unaligned (padding)
+]
+
+
+@pytest.mark.parametrize("bkv,group,sq,sk,d,dv,causal,window,softcap", CASES)
+def test_flash_forward_matches_oracle(bkv, group, sq, sk, d, dv, causal,
+                                      window, softcap):
+    keys = jax.random.split(jax.random.PRNGKey(0), 3)
+    q = jax.random.normal(keys[0], (bkv * group, sq, d), jnp.float32) * 0.3
+    k = jax.random.normal(keys[1], (bkv, sk, d), jnp.float32) * 0.3
+    v = jax.random.normal(keys[2], (bkv, sk, dv), jnp.float32) * 0.3
+    scale = 1.0 / d ** 0.5
+    got = flash_mha(q, k, v, scale, causal, window, softcap, group, True)
+    want = _oracle(q, k, v, scale, causal, window, softcap, group)
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want), rtol=2e-3, atol=2e-3)
+
+
+@pytest.mark.parametrize("bkv,group,sq,sk,d,dv,causal,window,softcap",
+                         CASES[:5])
+def test_flash_backward_matches_oracle(bkv, group, sq, sk, d, dv, causal,
+                                       window, softcap):
+    keys = jax.random.split(jax.random.PRNGKey(1), 3)
+    q = jax.random.normal(keys[0], (bkv * group, sq, d), jnp.float32) * 0.3
+    k = jax.random.normal(keys[1], (bkv, sk, d), jnp.float32) * 0.3
+    v = jax.random.normal(keys[2], (bkv, sk, dv), jnp.float32) * 0.3
+    scale = 1.0 / d ** 0.5
+
+    def loss_flash(q, k, v):
+        o = flash_mha(q, k, v, scale, causal, window, softcap, group, True)
+        return jnp.sum(jnp.sin(o))       # nontrivial cotangent
+
+    def loss_ref(q, k, v):
+        o = _oracle(q, k, v, scale, causal, window, softcap, group)
+        return jnp.sum(jnp.sin(o))
+
+    g_flash = jax.grad(loss_flash, argnums=(0, 1, 2))(q, k, v)
+    g_ref = jax.grad(loss_ref, argnums=(0, 1, 2))(q, k, v)
+    for name, a, b in zip("qkv", g_flash, g_ref):
+        np.testing.assert_allclose(np.asarray(a, np.float32),
+                                   np.asarray(b, np.float32),
+                                   rtol=5e-3, atol=5e-3,
+                                   err_msg=f"d{name}")
+
+
+def test_flash_numerically_stable_long_tail():
+    """Large logits (pre-softmax) must not overflow the online softmax."""
+    q = jnp.full((1, 128, 128), 8.0, jnp.float32)
+    k = jnp.full((1, 128, 128), 8.0, jnp.float32)
+    v = jax.random.normal(jax.random.PRNGKey(0), (1, 128, 128))
+    o = flash_mha(q, k, v, 1.0, True, 0, 0.0, 1, True)
+    assert bool(jnp.isfinite(o).all())
+
+
+def test_model_level_flash_equivalence():
+    """Whole-model logits: chunked vs flash paths agree (dense arch —
+    MoE archs differ by routing flips under bf16 noise)."""
+    import jax
+    from repro.configs import get_config, reduced
+    from repro.models import forward, model_init
+
+    cfg = reduced(get_config("qwen3-4b"))
+    params = model_init(jax.random.PRNGKey(0), cfg)
+    tokens = jax.random.randint(jax.random.PRNGKey(1), (2, 16), 0,
+                                cfg.vocab_size)
+    lc, _ = forward(params, cfg.replace(attn_impl="chunked"), tokens)
+    lf, _ = forward(params, cfg.replace(attn_impl="flash"), tokens)
+    np.testing.assert_allclose(np.asarray(lc, np.float32),
+                               np.asarray(lf, np.float32),
+                               rtol=0.03, atol=0.03)

@@ -1,0 +1,141 @@
+"""Per-architecture smoke tests (reduced configs) + decode consistency.
+
+Every assigned architecture: instantiate reduced config, run one forward
+(train) step asserting shapes/finiteness, one prefill+decode, and — the
+strong check — teacher-forced decode logits must match the parallel
+forward pass (the KV-cache path and the full path are the same function).
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCH_NAMES, get_config, reduced
+from repro.models import decode_step, forward, model_init, prefill
+from repro.models.transformer import encode
+
+
+def _inputs(cfg, key, b=2, s=8):
+    tokens = jax.random.randint(key, (b, s), 0, cfg.vocab_size)
+    kw = {}
+    if cfg.family == "vlm":
+        kw["extra_embeds"] = jax.random.normal(
+            key, (b, cfg.n_patches, cfg.d_model)).astype(jnp.bfloat16)
+    if cfg.is_encdec:
+        kw["frames"] = jax.random.normal(
+            key, (b, cfg.enc_seq_len, cfg.d_model)).astype(jnp.bfloat16)
+    return tokens, kw
+
+
+@pytest.fixture(scope="module")
+def rngs():
+    return jax.random.PRNGKey(0), jax.random.PRNGKey(1)
+
+
+@pytest.mark.parametrize("arch", ARCH_NAMES)
+def test_forward_smoke(arch, rngs):
+    key, dkey = rngs
+    cfg = reduced(get_config(arch))
+    params = model_init(key, cfg)
+    tokens, kw = _inputs(cfg, dkey)
+    logits, aux = forward(params, cfg, tokens, **kw)
+    s_out = tokens.shape[1] + (cfg.n_patches if cfg.family == "vlm" else 0)
+    assert logits.shape == (2, s_out, cfg.vocab_size)
+    assert bool(jnp.isfinite(logits).all()), "NaN/Inf in logits"
+    assert bool(jnp.isfinite(aux)), "NaN/Inf in aux loss"
+    if cfg.n_experts:
+        assert float(aux) > 0.0, "MoE aux loss should be positive"
+
+
+@pytest.mark.parametrize("arch", ARCH_NAMES)
+def test_train_gradients_finite(arch, rngs):
+    key, dkey = rngs
+    cfg = reduced(get_config(arch))
+    params = model_init(key, cfg)
+    tokens, kw = _inputs(cfg, dkey, b=1, s=8)
+
+    def loss_fn(p):
+        logits, aux = forward(p, cfg, tokens, **kw)
+        tok_logits = logits[:, -tokens.shape[1]:]
+        logp = jax.nn.log_softmax(tok_logits.astype(jnp.float32), -1)
+        nll = -jnp.take_along_axis(logp[:, :-1], tokens[:, 1:, None],
+                                   -1).mean()
+        return nll + 0.01 * aux
+
+    loss, grads = jax.value_and_grad(loss_fn)(params)
+    assert bool(jnp.isfinite(loss))
+    flat = jax.tree_util.tree_leaves(grads)
+    assert all(bool(jnp.isfinite(g).all()) for g in flat), "non-finite grad"
+    norms = sum(float(jnp.abs(g).sum()) for g in flat)
+    assert norms > 0.0, "gradients identically zero"
+
+
+@pytest.mark.parametrize("arch", ARCH_NAMES)
+def test_decode_matches_forward(arch, rngs):
+    """Teacher-forced: logits from step-by-step decode == parallel forward."""
+    key, dkey = rngs
+    cfg = reduced(get_config(arch))
+    params = model_init(key, cfg)
+    b, s = 1, 8
+    tokens, kw = _inputs(cfg, dkey, b=b, s=s)
+    n_pre = cfg.n_patches if cfg.family == "vlm" else 0
+
+    enc = encode(params, cfg, kw["frames"]) if cfg.is_encdec else None
+    full_logits, _ = forward(params, cfg, tokens, **kw)
+
+    # prefill on the first half, decode the second half teacher-forced
+    split = s // 2
+    pre_tokens = tokens[:, :split]
+    logits, caches, _ = prefill(params, cfg, pre_tokens,
+                                max_len=s + n_pre, **kw)
+    got = [np.asarray(logits[:, -1].astype(jnp.float32))]
+    for t in range(split, s):
+        step_tok = tokens[:, t:t + 1]
+        lg, caches = decode_step(params, cfg, step_tok, caches,
+                                 n_pre + t, enc_out=enc)
+        got.append(np.asarray(lg[:, -1].astype(jnp.float32)))
+
+    want = np.asarray(full_logits[:, n_pre + split - 1:, :]
+                      .astype(jnp.float32))
+    got = np.stack(got, axis=1)[:, :want.shape[1]]
+    # the cache path recomputes identical math; only bf16 noise allowed
+    np.testing.assert_allclose(got, want, rtol=0.02, atol=0.02)
+
+
+def test_param_counts_match_analytical():
+    """Analytical counter == actual pytree size for the reduced configs."""
+    key = jax.random.PRNGKey(0)
+    for arch in ARCH_NAMES:
+        cfg = reduced(get_config(arch))
+        params = model_init(key, cfg)
+        actual = sum(int(np.prod(p.shape))
+                     for p in jax.tree_util.tree_leaves(params))
+        analytical = cfg.param_count()
+        err = abs(actual - analytical) / actual
+        assert err < 0.05, (arch, actual, analytical)
+
+
+def test_full_config_param_counts():
+    """Full-size analytical counts are in the advertised ballparks."""
+    expected_b = {   # billions, loose bands (total params)
+        "gemma3_1b": (0.7, 1.6),
+        "gemma_7b": (7.0, 10.0),
+        "qwen3_4b": (3.0, 5.0),
+        "yi_6b": (5.5, 7.0),
+        "mamba2_780m": (0.6, 1.0),
+        "phi3_vision_4_2b": (3.4, 4.6),
+        "whisper_base": (0.05, 0.11),
+        "deepseek_v3_671b": (600.0, 720.0),
+        "llama4_maverick_400b_a17b": (330.0, 480.0),
+        "jamba_v0_1_52b": (45.0, 60.0),
+    }
+    for arch, (lo, hi) in expected_b.items():
+        n = get_config(arch).param_count() / 1e9
+        assert lo <= n <= hi, f"{arch}: {n:.2f}B not in [{lo},{hi}]"
+
+
+def test_moe_active_params():
+    cfg = get_config("deepseek_v3_671b")
+    active = cfg.param_count(active_only=True) / 1e9
+    assert 25.0 <= active <= 55.0, active   # ~37B active

@@ -1,0 +1,128 @@
+"""Functional verification of the five multiplier architectures.
+
+This is the paper's Fig. 3 testbench done exhaustively: every
+architecture must produce bit-exact products over the full 8-bit operand
+space, and the cycle accounting must match Table 2.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.multipliers import (
+    MULTIPLIERS,
+    booth_radix2,
+    build_hex_string_lut,
+    lut_array,
+    lut_array_16bit,
+    nibble_precompute,
+    shift_add,
+    wallace,
+)
+
+UNSIGNED_ARCHES = ["shift_add", "nibble_precompute", "wallace", "lut_array"]
+
+
+@pytest.mark.parametrize("arch", UNSIGNED_ARCHES)
+def test_exhaustive_unsigned_8bit(arch):
+    """Every (a, b) in [0,256)²: architecture output == a*b exactly."""
+    fn = MULTIPLIERS[arch]
+    a = jnp.arange(256, dtype=jnp.int32)
+    expected = np.arange(256, dtype=np.int64)
+    for b in range(256):
+        got = np.asarray(fn(a, b).products)
+        np.testing.assert_array_equal(got, expected * b,
+                                      err_msg=f"{arch} b={b}")
+
+
+def test_exhaustive_booth_signed():
+    """Booth is a two's-complement scheme: exact over signed int8 × int8."""
+    a = jnp.arange(-128, 128, dtype=jnp.int32)
+    expected = np.arange(-128, 128, dtype=np.int64)
+    for b in range(-128, 128):
+        got = np.asarray(booth_radix2(a, b).products)
+        np.testing.assert_array_equal(got, expected * b, err_msg=f"b={b}")
+
+
+def test_exhaustive_nibble_signed():
+    """The signed nibble split keeps Algorithm 2 exact for int8 operands."""
+    a = jnp.arange(-128, 128, dtype=jnp.int32)
+    expected = np.arange(-128, 128, dtype=np.int64)
+    for b in range(-128, 128):
+        got = np.asarray(nibble_precompute(a, jnp.int32(b), signed=True).products)
+        np.testing.assert_array_equal(got, expected * b, err_msg=f"b={b}")
+
+
+def test_lut_16bit_operand_path():
+    """Algorithm 1's full 16-bit-A path: Out1 + (Out2 << 8) == A*B."""
+    a16 = jnp.arange(0, 65536, 251, dtype=jnp.int32)
+    exp = np.arange(0, 65536, 251, dtype=np.int64)
+    for b in (0, 1, 15, 16, 171, 255):
+        o1, o2 = lut_array_16bit(a16, b)
+        np.testing.assert_array_equal(np.asarray(o1) + (np.asarray(o2) << 8),
+                                      exp * b)
+
+
+def test_hex_string_lut_contents():
+    """Fig. 1(a): row b, slice a holds the 8-bit product b*a (< 256)."""
+    lut = build_hex_string_lut()
+    assert lut.shape == (16, 16)
+    assert lut.max() == 225 < 256  # every segment fits 8 bits
+    for b in range(16):
+        np.testing.assert_array_equal(lut[b], np.arange(16) * b)
+
+
+# ---------------------------------------------------------------------------
+# Table 2: cycle accounting
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("arch,per_op,total_16", [
+    ("shift_add", 8, 128),
+    ("booth_radix2", 4, 64),
+    ("nibble_precompute", 2, 32),
+    ("wallace", 1, 1),
+    ("lut_array", 1, 1),
+])
+def test_table2_cycles(arch, per_op, total_16):
+    a = jnp.arange(16, dtype=jnp.int32)
+    tr = MULTIPLIERS[arch](a, 7)
+    assert tr.cycles_per_operand == per_op
+    assert tr.cycles == total_16
+
+
+@given(n=st.integers(1, 64))
+@settings(max_examples=20, deadline=None)
+def test_cycles_scale_linearly_for_sequential(n):
+    a = jnp.zeros((n,), jnp.int32)
+    assert shift_add(a, 3).cycles == 8 * n
+    assert nibble_precompute(a, 3).cycles == 2 * n
+    assert wallace(a, 3).cycles == 1
+
+
+# ---------------------------------------------------------------------------
+# Property tests: all architectures agree with each other (Fig. 3's claim)
+# ---------------------------------------------------------------------------
+
+@given(a=st.lists(st.integers(0, 255), min_size=1, max_size=32),
+       b=st.integers(0, 255))
+@settings(max_examples=200, deadline=None)
+def test_architectures_agree_unsigned(a, b):
+    arr = jnp.asarray(a, jnp.int32)
+    outs = {n: np.asarray(MULTIPLIERS[n](arr, b).products)
+            for n in UNSIGNED_ARCHES}
+    ref = outs["wallace"]
+    for name, got in outs.items():
+        np.testing.assert_array_equal(got, ref, err_msg=name)
+
+
+@given(a=st.lists(st.integers(-128, 127), min_size=1, max_size=32),
+       b=st.integers(-128, 127))
+@settings(max_examples=200, deadline=None)
+def test_signed_paths_agree(a, b):
+    arr = jnp.asarray(a, jnp.int32)
+    booth = np.asarray(booth_radix2(arr, b).products)
+    nib = np.asarray(nibble_precompute(arr, jnp.int32(b), signed=True).products)
+    np.testing.assert_array_equal(booth, np.asarray(a, np.int64) * b)
+    np.testing.assert_array_equal(nib, booth)

@@ -1,0 +1,70 @@
+"""Unit + property tests for nibble decomposition and precompute logic."""
+
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.nibble import (
+    combine_nibbles,
+    numpy_pl_scale,
+    pack_int4,
+    pl_adder_count,
+    pl_recipe_table,
+    pl_scale,
+    pl_scale_reference,
+    split_nibbles_signed,
+    split_nibbles_unsigned,
+    unpack_int4,
+)
+
+
+def test_unsigned_split_roundtrip_exhaustive():
+    x = jnp.arange(256, dtype=jnp.int32)
+    lo, hi = split_nibbles_unsigned(x)
+    assert int(lo.max()) == 15 and int(lo.min()) == 0
+    assert int(hi.max()) == 15 and int(hi.min()) == 0
+    np.testing.assert_array_equal(np.asarray(combine_nibbles(lo, hi)),
+                                  np.arange(256))
+
+
+def test_signed_split_roundtrip_exhaustive():
+    x = jnp.arange(-128, 128, dtype=jnp.int8)
+    lo, hi = split_nibbles_signed(x)
+    assert int(lo.min()) >= 0 and int(lo.max()) <= 15
+    assert int(hi.min()) >= -8 and int(hi.max()) <= 7
+    np.testing.assert_array_equal(np.asarray(combine_nibbles(lo, hi)),
+                                  np.arange(-128, 128))
+
+
+def test_pl_recipes_are_binary_expansions():
+    """Fig. 2(b): recipe for k is the set-bit shift set; ≤3 adders."""
+    for k, shifts in enumerate(pl_recipe_table()):
+        assert sum(1 << s for s in shifts) == k
+        assert pl_adder_count(k) <= 3
+
+
+def test_pl_scale_exhaustive():
+    a = jnp.arange(256, dtype=jnp.int32)
+    for k in range(16):
+        np.testing.assert_array_equal(
+            np.asarray(pl_scale(a, jnp.int32(k))),
+            np.asarray(pl_scale_reference(a, jnp.int32(k))))
+        # the numpy recipe mirror agrees too (same dataflow, two impls)
+        np.testing.assert_array_equal(numpy_pl_scale(np.arange(256), k),
+                                      np.arange(256) * k)
+
+
+@given(st.lists(st.integers(-8, 7), min_size=2, max_size=64)
+       .filter(lambda v: len(v) % 2 == 0))
+@settings(max_examples=100, deadline=None)
+def test_pack_unpack_roundtrip(vals):
+    w = jnp.asarray(vals, jnp.int32).reshape(1, -1)
+    np.testing.assert_array_equal(np.asarray(unpack_int4(pack_int4(w))),
+                                  np.asarray(w))
+
+
+def test_pack_halves_storage():
+    w = jnp.zeros((4, 128), jnp.int32)
+    assert pack_int4(w).shape == (4, 64)
+    assert pack_int4(w).dtype == jnp.int8

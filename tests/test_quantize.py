@@ -1,0 +1,114 @@
+"""Quantization substrate tests (incl. QAT straight-through gradients)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import quantize as q
+from repro.core.linear import (
+    linear_apply,
+    linear_init,
+    lut_matmul_xla,
+    nibble_matmul_xla,
+)
+
+
+def test_quant_dequant_error_bound():
+    x = jax.random.normal(jax.random.PRNGKey(0), (64, 128))
+    qt = q.quantize(x, bits=8, granularity="per_channel")
+    err = jnp.abs(qt.dequantize() - x)
+    # max error is half an LSB = scale/2 per channel
+    assert bool(jnp.all(err <= qt.scale / 2 + 1e-6))
+
+
+def test_per_tensor_vs_per_channel():
+    x = jnp.array([[100.0, 0.01], [50.0, 0.02]])
+    pt = q.quantize(x, granularity="per_tensor")
+    pc = q.quantize(x, granularity="per_channel", axis=0)
+    # per-channel must represent the small column far better
+    err_pt = float(jnp.abs(pt.dequantize() - x)[0, 1])
+    err_pc = float(jnp.abs(pc.dequantize() - x)[0, 1])
+    assert err_pc < err_pt
+
+
+def test_int8_range_respected():
+    x = jnp.linspace(-10, 10, 1000)
+    qt = q.quantize(x, bits=8, granularity="per_tensor")
+    assert int(qt.values.max()) <= 127 and int(qt.values.min()) >= -128
+
+
+def test_int4_range_respected():
+    x = jax.random.normal(jax.random.PRNGKey(1), (32, 32))
+    qt = q.quantize(x, bits=4)
+    assert int(qt.values.max()) <= 7 and int(qt.values.min()) >= -8
+
+
+def test_fake_quant_forward_matches_quant_dequant():
+    x = jax.random.normal(jax.random.PRNGKey(2), (16, 64))
+    fq = q.fake_quant(x, bits=8, axis=-1)
+    qt = q.quantize(x, bits=8, granularity="per_channel", axis=-1)
+    np.testing.assert_allclose(np.asarray(fq), np.asarray(qt.dequantize()),
+                               rtol=0, atol=1e-6)
+
+
+def test_fake_quant_gradient_is_straight_through():
+    x = jnp.ones((8,)) * 0.5
+    g = jax.grad(lambda v: jnp.sum(q.fake_quant(v, bits=8, axis=-1)))(x)
+    # gradient flows (not zero, as hard rounding would give)
+    assert bool(jnp.all(jnp.abs(g) > 0))
+
+
+def test_qtensor_is_pytree():
+    qt = q.quantize(jnp.ones((4, 4)))
+    leaves, tdef = jax.tree_util.tree_flatten(qt)
+    assert len(leaves) == 2
+    qt2 = jax.tree_util.tree_unflatten(tdef, leaves)
+    assert qt2.bits == qt.bits
+
+
+# ---------------------------------------------------------------------------
+# QuantLinear end-to-end
+# ---------------------------------------------------------------------------
+
+@given(mode=st.sampled_from(["w8a8_nibble", "w4a8_nibble", "lut"]))
+@settings(max_examples=12, deadline=None)
+def test_linear_quant_modes_close_to_dense(mode):
+    key = jax.random.PRNGKey(42)
+    params = linear_init(key, 64, 32)
+    x = jax.random.normal(jax.random.PRNGKey(7), (8, 64), jnp.float32) \
+        .astype(jnp.bfloat16)
+    dense = linear_apply(params, x, mode="dense").astype(jnp.float32)
+    quant = linear_apply(params, x, mode=mode).astype(jnp.float32)
+    # int8 per-tensor activations: expect small relative error
+    rel = float(jnp.linalg.norm(quant - dense) / jnp.linalg.norm(dense))
+    tol = 0.15 if mode == "w4a8_nibble" else 0.08
+    assert rel < tol, (mode, rel)
+
+
+def test_nibble_matmul_xla_exact_int():
+    rng = np.random.default_rng(3)
+    x = rng.integers(-128, 128, (5, 48)).astype(np.int8)
+    w = rng.integers(-128, 128, (48, 16)).astype(np.int8)
+    got = np.asarray(nibble_matmul_xla(jnp.asarray(x), jnp.asarray(w)))
+    np.testing.assert_array_equal(got, x.astype(np.int32) @ w.astype(np.int32))
+
+
+def test_lut_matmul_xla_exact_int():
+    rng = np.random.default_rng(4)
+    x = rng.integers(-128, 128, (5, 48)).astype(np.int8)
+    w = rng.integers(-128, 128, (48, 16)).astype(np.int8)
+    got = np.asarray(lut_matmul_xla(jnp.asarray(x), jnp.asarray(w)))
+    np.testing.assert_array_equal(got, x.astype(np.int32) @ w.astype(np.int32))
+
+
+def test_qat_mode_differentiable():
+    params = linear_init(jax.random.PRNGKey(0), 32, 16)
+    x = jax.random.normal(jax.random.PRNGKey(1), (4, 32), jnp.float32)
+
+    def loss(p):
+        return jnp.sum(linear_apply(p, x, mode="qat") ** 2).astype(jnp.float32)
+
+    g = jax.grad(loss)(params)
+    assert float(jnp.abs(g["w"]).sum()) > 0

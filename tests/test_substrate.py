@@ -1,0 +1,269 @@
+"""Substrate tests: optimizer, schedule, data, checkpoint, compression,
+fault tolerance, serve engine."""
+
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.checkpoint import Checkpointer
+from repro.data import DataConfig, SyntheticLM, host_batch_slice
+from repro.distributed.compression import (
+    compress_tree_int8,
+    compressed_bytes,
+    ef_compress,
+)
+from repro.optim import AdamWConfig, adamw_init, adamw_update, warmup_cosine
+from repro.runtime import (
+    HeartbeatMonitor,
+    StragglerDetector,
+    plan_elastic_mesh,
+)
+
+
+# ---------------------------------------------------------------------------
+# Optimizer
+# ---------------------------------------------------------------------------
+
+def _quadratic_params():
+    return {"w": jnp.array([3.0, -2.0, 1.5]), "b": jnp.array([[0.5, -0.5]])}
+
+
+@pytest.mark.parametrize("quantized", [False, True])
+def test_adamw_converges_on_quadratic(quantized):
+    cfg = AdamWConfig(lr=0.05, weight_decay=0.0, grad_clip=0.0,
+                      quantize_moments=quantized)
+    params = _quadratic_params()
+    state = adamw_init(params, cfg)
+
+    def loss(p):
+        return sum(jnp.sum(jnp.square(x))
+                   for x in jax.tree_util.tree_leaves(p))
+
+    for _ in range(300):
+        grads = jax.grad(loss)(params)
+        params, state, _ = adamw_update(params, grads, state, cfg)
+    assert float(loss(params)) < 1e-2
+
+
+def test_adamw_weight_decay_only_on_matrices():
+    cfg = AdamWConfig(lr=0.1, weight_decay=1.0, grad_clip=0.0)
+    params = {"mat": jnp.ones((2, 2)), "vec": jnp.ones((2,))}
+    state = adamw_init(params, cfg)
+    zero_g = jax.tree_util.tree_map(jnp.zeros_like, params)
+    new, _, _ = adamw_update(params, zero_g, state, cfg)
+    assert float(jnp.abs(new["mat"]).max()) < 1.0   # decayed
+    assert float(jnp.abs(new["vec"]).max()) == 1.0  # untouched
+
+
+def test_grad_clip_reported():
+    cfg = AdamWConfig(grad_clip=1.0)
+    params = {"w": jnp.zeros((4,))}
+    state = adamw_init(params, cfg)
+    _, _, metrics = adamw_update(params, {"w": jnp.full((4,), 100.0)},
+                                 state, cfg)
+    assert float(metrics["grad_norm"]) == pytest.approx(200.0)
+
+
+def test_warmup_cosine_shape():
+    assert float(warmup_cosine(0, warmup=10, total=100)) == 0.0
+    assert float(warmup_cosine(10, warmup=10, total=100)) == pytest.approx(1.0)
+    assert float(warmup_cosine(100, warmup=10, total=100)) == pytest.approx(0.1)
+    mid = float(warmup_cosine(55, warmup=10, total=100))
+    assert 0.1 < mid < 1.0
+
+
+# ---------------------------------------------------------------------------
+# Data pipeline
+# ---------------------------------------------------------------------------
+
+def test_data_deterministic_and_restartable():
+    cfg = DataConfig(vocab_size=1000, seq_len=32, global_batch=8)
+    a, b = SyntheticLM(cfg), SyntheticLM(cfg)
+    for step in (0, 5, 17):
+        np.testing.assert_array_equal(np.asarray(a.batch(step)["tokens"]),
+                                      np.asarray(b.batch(step)["tokens"]))
+
+
+def test_data_host_sharding_disjoint():
+    cfg = DataConfig(vocab_size=1000, seq_len=16, global_batch=8)
+    h0 = SyntheticLM(cfg, host_id=0, n_hosts=2)
+    h1 = SyntheticLM(cfg, host_id=1, n_hosts=2)
+    assert h0.local_batch == h1.local_batch == 4
+    t0, t1 = h0.batch(3)["tokens"], h1.batch(3)["tokens"]
+    assert not np.array_equal(np.asarray(t0), np.asarray(t1))
+
+
+def test_labels_are_shifted_tokens():
+    cfg = DataConfig(vocab_size=50, seq_len=16, global_batch=2)
+    b = SyntheticLM(cfg).batch(0)
+    np.testing.assert_array_equal(np.asarray(b["labels"][:, :-1]),
+                                  np.asarray(b["tokens"][:, 1:]))
+    assert int(b["labels"][0, -1]) == -1
+
+
+@given(n_hosts=st.sampled_from([1, 2, 4, 8]), host=st.integers(0, 7))
+@settings(max_examples=20, deadline=None)
+def test_host_slices_partition_batch(n_hosts, host):
+    if host >= n_hosts:
+        return
+    start, size = host_batch_slice(64, host, n_hosts)
+    assert size == 64 // n_hosts
+    assert start == host * size
+
+
+# ---------------------------------------------------------------------------
+# Checkpointing
+# ---------------------------------------------------------------------------
+
+def test_checkpoint_roundtrip(tmp_path):
+    ck = Checkpointer(str(tmp_path), async_save=False)
+    state = {"params": {"w": jnp.arange(6.0).reshape(2, 3)},
+             "opt": {"step": jnp.int32(7),
+                     "mu": [jnp.ones((2,)), jnp.zeros((3,))]}}
+    ck.save(7, state)
+    template = jax.tree_util.tree_map(jnp.zeros_like, state)
+    restored, step = ck.restore(template)
+    assert step == 7
+    np.testing.assert_array_equal(np.asarray(restored["params"]["w"]),
+                                  np.arange(6.0).reshape(2, 3))
+
+
+def test_checkpoint_gc_keeps_latest(tmp_path):
+    ck = Checkpointer(str(tmp_path), keep=2, async_save=False)
+    state = {"w": jnp.zeros((2,))}
+    for s in (1, 2, 3, 4):
+        ck.save(s, state)
+    assert ck.latest_step() == 4
+    steps = sorted(int(n.split("_")[1]) for n in os.listdir(tmp_path)
+                   if n.startswith("step_"))
+    assert steps == [3, 4]
+
+
+def test_checkpoint_structure_mismatch_raises(tmp_path):
+    ck = Checkpointer(str(tmp_path), async_save=False)
+    ck.save(1, {"a": jnp.zeros((2,))})
+    with pytest.raises(ValueError, match="mismatch"):
+        ck.restore({"b": jnp.zeros((2,))})
+
+
+def test_checkpoint_async_save(tmp_path):
+    ck = Checkpointer(str(tmp_path), async_save=True)
+    ck.save(3, {"w": jnp.ones((4,))})
+    ck.wait()
+    assert ck.latest_step() == 3
+
+
+def test_checkpoint_restart_reproduces_training(tmp_path):
+    """checkpoint → restart == uninterrupted run (exactness of failover)."""
+    cfg = AdamWConfig(lr=0.1)
+    params = {"w": jnp.ones((3,))}
+    state = adamw_init(params, cfg)
+
+    def grad_at(step):
+        return {"w": jnp.full((3,), 0.1 * (step + 1))}
+
+    # uninterrupted 6 steps
+    p1, s1 = params, state
+    for t in range(6):
+        p1, s1, _ = adamw_update(p1, grad_at(t), s1, cfg)
+
+    # interrupted at 3 + restore + continue
+    ck = Checkpointer(str(tmp_path), async_save=False)
+    p2, s2 = params, state
+    for t in range(3):
+        p2, s2, _ = adamw_update(p2, grad_at(t), s2, cfg)
+    ck.save(3, {"p": p2, "s": s2})
+    restored, step = ck.restore({"p": p2, "s": s2})
+    p3, s3 = restored["p"], restored["s"]
+    for t in range(step, 6):
+        p3, s3, _ = adamw_update(p3, grad_at(t), s3, cfg)
+    np.testing.assert_allclose(np.asarray(p1["w"]), np.asarray(p3["w"]),
+                               rtol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# Gradient compression
+# ---------------------------------------------------------------------------
+
+def test_compression_relative_error_bounded():
+    g = {"a": jax.random.normal(jax.random.PRNGKey(0), (128,)),
+         "b": jax.random.normal(jax.random.PRNGKey(1), (64, 4))}
+    deq, _ = compress_tree_int8(g)
+    for k in g:
+        err = float(jnp.max(jnp.abs(deq[k] - g[k])))
+        scale = float(jnp.max(jnp.abs(g[k]))) / 127.0
+        assert err <= scale * 0.5 + 1e-7
+
+
+def test_error_feedback_reduces_bias():
+    """Accumulated EF-compressed gradients track the true sum."""
+    key = jax.random.PRNGKey(2)
+    true_sum = jnp.zeros((32,))
+    ef_sum = jnp.zeros((32,))
+    residual = None
+    for i in range(50):
+        key, sub = jax.random.split(key)
+        g = {"w": jax.random.normal(sub, (32,)) * 0.01}
+        true_sum = true_sum + g["w"]
+        deq, _, residual = ef_compress(g, residual)
+        ef_sum = ef_sum + deq["w"]
+    drift = float(jnp.linalg.norm(ef_sum - true_sum)
+                  / jnp.linalg.norm(true_sum))
+    assert drift < 0.05, drift
+
+
+def test_compression_ratio_about_4x():
+    g = {"w": jnp.zeros((1024, 1024), jnp.float32)}
+    raw, comp = compressed_bytes(g)
+    assert raw / comp > 3.9
+
+
+# ---------------------------------------------------------------------------
+# Fault tolerance
+# ---------------------------------------------------------------------------
+
+def test_heartbeat_detects_dead_host():
+    hb = HeartbeatMonitor(n_hosts=3, timeout_s=10.0)
+    hb.beat(0, 100.0)
+    hb.beat(1, 100.0)
+    hb.beat(2, 95.0)
+    assert hb.dead_hosts(104.0) == []
+    assert hb.dead_hosts(106.0) == [2]
+    assert not hb.healthy(200.0)
+
+
+def test_straggler_detection_with_patience():
+    sd = StragglerDetector(n_hosts=4, threshold=1.5, patience=2)
+    for step in range(5):
+        for h in range(4):
+            sd.record(h, 1.0 if h != 3 else 2.5)
+        flagged = sd.stragglers()
+    assert flagged == [3]
+
+
+def test_straggler_rebalance_conserves_microbatches():
+    sd = StragglerDetector(n_hosts=4)
+    for h, t in enumerate([1.0, 1.0, 1.0, 3.0]):
+        sd.record(h, t)
+    alloc = sd.rebalance_microbatches(16)
+    assert sum(alloc.values()) == 16
+    assert alloc[3] < alloc[0]          # slow host gets less work
+
+
+def test_elastic_mesh_plan():
+    plan = plan_elastic_mesh(surviving_hosts=30, chips_per_host=8,
+                             model_axis=16, global_batch=256)
+    assert plan.model_axis == 16
+    assert plan.data_axis * 16 <= 240
+    assert plan.global_batch % plan.data_axis == 0
+
+
+def test_elastic_mesh_insufficient_chips_raises():
+    with pytest.raises(ValueError):
+        plan_elastic_mesh(surviving_hosts=1, chips_per_host=8,
+                          model_axis=16, global_batch=64)

@@ -1,0 +1,142 @@
+"""Training-step semantics: loss properties, grad accumulation
+equivalence, compression integration, MTP objective."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config, reduced
+from repro.data import DataConfig, SyntheticLM
+from repro.models import model_init
+from repro.optim import AdamWConfig, adamw_init, adamw_update
+from repro.train import TrainConfig, make_loss_fn, make_train_step
+from repro.train.step import accumulate_grads, cross_entropy, z_loss
+
+
+def test_cross_entropy_matches_gather_formulation():
+    key = jax.random.PRNGKey(0)
+    logits = jax.random.normal(key, (2, 8, 32))
+    labels = jax.random.randint(jax.random.PRNGKey(1), (2, 8), 0, 32)
+    got = float(cross_entropy(logits, labels))
+    logp = jax.nn.log_softmax(logits, -1)
+    want = float(-jnp.take_along_axis(logp, labels[..., None], -1).mean())
+    assert abs(got - want) < 1e-5
+
+
+def test_cross_entropy_ignores_masked_labels():
+    logits = jax.random.normal(jax.random.PRNGKey(0), (1, 4, 16))
+    labels = jnp.array([[3, -1, -1, 5]])
+    got = float(cross_entropy(logits, labels))
+    # equals mean over only the two valid positions
+    logp = jax.nn.log_softmax(logits, -1)
+    want = float(-(logp[0, 0, 3] + logp[0, 3, 5]) / 2)
+    assert abs(got - want) < 1e-5
+
+
+def test_z_loss_positive_and_masked():
+    logits = jax.random.normal(jax.random.PRNGKey(0), (1, 4, 16)) * 5
+    labels = jnp.array([[1, 2, -1, -1]])
+    assert float(z_loss(logits, labels)) > 0
+
+
+def _tiny_cfg():
+    return reduced(get_config("yi-6b")).replace(vocab_size=128)
+
+
+def test_grad_accumulation_equivalence():
+    """N-microbatch accumulation == single-batch gradients (linearity)."""
+    cfg = _tiny_cfg()
+    tcfg = TrainConfig(z_loss_weight=0.0)
+    loss_fn = make_loss_fn(cfg, tcfg)
+    params = model_init(jax.random.PRNGKey(0), cfg)
+    batch = {
+        "tokens": jax.random.randint(jax.random.PRNGKey(1), (4, 16), 0,
+                                     cfg.vocab_size),
+        "labels": jax.random.randint(jax.random.PRNGKey(2), (4, 16), 0,
+                                     cfg.vocab_size),
+    }
+    _, _, g1 = accumulate_grads(loss_fn, params, batch, 1)
+    _, _, g4 = accumulate_grads(loss_fn, params, batch, 4)
+    flat1 = jax.tree_util.tree_leaves(g1)
+    flat4 = jax.tree_util.tree_leaves(g4)
+    for a, b in zip(flat1, flat4):
+        np.testing.assert_allclose(np.asarray(a, np.float32),
+                                   np.asarray(b, np.float32),
+                                   rtol=2e-2, atol=2e-3)
+
+
+def test_train_step_reduces_loss_on_repeated_batch():
+    cfg = _tiny_cfg()
+    tcfg = TrainConfig(optimizer=AdamWConfig(lr=3e-3), warmup_steps=1,
+                       total_steps=100)
+    step = jax.jit(make_train_step(cfg, tcfg))
+    params = model_init(jax.random.PRNGKey(0), cfg)
+    opt = adamw_init(params, tcfg.optimizer)
+    data = SyntheticLM(DataConfig(vocab_size=cfg.vocab_size, seq_len=32,
+                                  global_batch=4))
+    batch = data.batch(0)
+    first = None
+    for _ in range(20):
+        params, opt, metrics = step(params, opt, batch)
+        if first is None:
+            first = float(metrics["loss"])
+    last = float(metrics["loss"])
+    assert last < first, (first, last)
+
+
+def test_train_step_with_compression_still_learns():
+    cfg = _tiny_cfg()
+    tcfg = TrainConfig(optimizer=AdamWConfig(lr=3e-3), warmup_steps=1,
+                       total_steps=100, compress_grads=True)
+    step = jax.jit(make_train_step(cfg, tcfg))
+    params = model_init(jax.random.PRNGKey(0), cfg)
+    opt = adamw_init(params, tcfg.optimizer)
+    data = SyntheticLM(DataConfig(vocab_size=cfg.vocab_size, seq_len=32,
+                                  global_batch=4))
+    batch = data.batch(0)
+    first = None
+    for _ in range(20):
+        params, opt, metrics = step(params, opt, batch)
+        if first is None:
+            first = float(metrics["loss"])
+    assert float(metrics["loss"]) < first
+
+
+def test_mtp_objective_adds_loss():
+    cfg = _tiny_cfg()
+    batch = {
+        "tokens": jax.random.randint(jax.random.PRNGKey(1), (2, 16), 0,
+                                     cfg.vocab_size),
+        "labels": jax.random.randint(jax.random.PRNGKey(2), (2, 16), 0,
+                                     cfg.vocab_size),
+    }
+    params = model_init(jax.random.PRNGKey(0), cfg)
+    base = make_loss_fn(cfg, TrainConfig(z_loss_weight=0.0))
+    mtp = make_loss_fn(cfg, TrainConfig(z_loss_weight=0.0, mtp_weight=0.5,
+                                        mtp_depth=1))
+    l0, _ = base(params, batch)
+    l1, _ = mtp(params, batch)
+    assert float(l1) > float(l0)
+
+
+def test_quantized_moments_track_fp32_training():
+    """int8-moment AdamW must land near fp32-moment AdamW on a small task
+    (the low-precision-optimizer-state claim)."""
+    def loss(p):
+        return jnp.sum(jnp.square(p["w"] - 3.0))
+
+    runs = {}
+    for quant in (False, True):
+        cfg = AdamWConfig(lr=0.1, weight_decay=0.0, grad_clip=0.0,
+                          quantize_moments=quant)
+        p = {"w": jnp.zeros((8,))}
+        s = adamw_init(p, cfg)
+        for _ in range(150):
+            g = jax.grad(loss)(p)
+            p, s, _ = adamw_update(p, g, s, cfg)
+        runs[quant] = float(loss(p))
+    assert runs[True] < 1e-2
+    assert abs(runs[True] - runs[False]) < 1e-2
+
+
