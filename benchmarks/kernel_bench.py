@@ -5,17 +5,27 @@ design point (CPU wall-clock is a functional proxy — the structural
 numbers that transfer to TPU are the flops/bytes derived alongside):
 
 * dense bf16 matmul             — no-paper baseline
-* w8a8 nibble (2-pass)          — the paper's precompute-reuse design
+* w8a8 nibble (plane-fused)     — the paper's precompute-reuse design,
+                                  single MXU pass per K step (the lo/hi
+                                  planes are concatenated along K with
+                                  the << 4 folded into the operand)
 * w8a8 one-shot int8 dot        — "shift-add equivalent" monolithic int
 * LUT one-hot selection         — the paper's LUT array design
 * w4a8 nibble (packed weights)  — nibble storage win (HBM bytes halved)
+* w8a8 fused dequant epilogue   — quantize → nibble matmul → bf16 out in
+                                  one pass: no int32 HBM materialization
 
 Pallas-kernel variants run in interpret mode for correctness, not speed;
 their per-design flops/bytes columns are the TPU-side cost model.
+Columns: ``mxu_passes`` counts dot issues per K step; ``out_bytes`` is
+the modeled HBM output traffic (int32 paths write — and with the seed's
+revisit scheme, re-read — the int32 block; the fused path writes bf16
+exactly once).
 """
 
 from __future__ import annotations
 
+import json
 import time
 
 import jax
@@ -27,20 +37,35 @@ from repro.core.nibble import pack_int4, unpack_int4
 
 SHAPES = [(256, 1024, 1024), (512, 4096, 1024)]
 
+_HEADER = ("kernel,design,M,N,K,us_per_call,int_flops,weight_bytes,"
+           "out_bytes,mxu_passes")
+
 
 def _time(fn, *args, iters=5):
-    fn(*args)[0].block_until_ready() if isinstance(fn(*args), tuple) else \
-        fn(*args).block_until_ready()
+    """Mean per-call microseconds.  One warmup call (compiles + blocks),
+    then a timed loop that blocks once at the end — `jax.block_until_ready`
+    handles tuple/pytree outputs."""
+    jax.block_until_ready(fn(*args))          # warmup, exactly once
     t0 = time.perf_counter()
     for _ in range(iters):
         out = fn(*args)
-    out.block_until_ready()
+    jax.block_until_ready(out)
     return (time.perf_counter() - t0) / iters * 1e6
 
 
-def run() -> list[str]:
-    rows = ["kernel,design,M,N,K,us_per_call,int_flops,weight_bytes,"
-            "mxu_passes"]
+def _fused_dequant_xla(x, w_q, w_scale):
+    """XLA analog of the fused kernel: per-row quantize → plane-fused
+    single-dot → scale epilogue → bf16.  int32 never leaves registers."""
+    amax = jnp.maximum(jnp.max(jnp.abs(x), axis=-1, keepdims=True), 1e-8)
+    x_scale = amax / 127.0
+    x_q = jnp.clip(jnp.round(x / x_scale), -128, 127).astype(jnp.int8)
+    acc = nibble_matmul_xla(x_q, w_q)
+    return (acc.astype(jnp.float32) * x_scale * w_scale) \
+        .astype(jnp.bfloat16)
+
+
+def run_structured() -> list[dict]:
+    recs = []
     rng = np.random.default_rng(0)
     for m, n, k in SHAPES:
         x8 = jnp.asarray(rng.integers(-128, 128, (m, k)), jnp.int8)
@@ -49,37 +74,69 @@ def run() -> list[str]:
         w4p = pack_int4(w4)
         xb = jnp.asarray(rng.normal(size=(m, k)), jnp.bfloat16)
         wb = jnp.asarray(rng.normal(size=(k, n)), jnp.bfloat16)
+        xf = jnp.asarray(rng.normal(size=(m, k)), jnp.float32)
+        ws = jnp.asarray(rng.uniform(0.01, 0.1, (1, n)), jnp.float32)
 
         flops = 2 * m * n * k
+        int32_out = m * n * 4
+        bf16_out = m * n * 2
+
+        def rec(design, t, int_flops, weight_bytes, out_bytes, passes):
+            recs.append(dict(design=design, M=m, N=n, K=k,
+                             us_per_call=round(t, 1), int_flops=int_flops,
+                             weight_bytes=weight_bytes, out_bytes=out_bytes,
+                             mxu_passes=passes))
 
         dense = jax.jit(lambda a, b: a @ b)
-        t = _time(dense, xb, wb)
-        rows.append(f"kernel,dense_bf16,{m},{n},{k},{t:.1f},{flops},"
-                    f"{k * n * 2},1")
+        rec("dense_bf16", _time(dense, xb, wb), flops, k * n * 2,
+            bf16_out, 1)
 
         one_shot = jax.jit(lambda a, b: jax.lax.dot_general(
             a, b, (((1,), (0,)), ((), ())),
             preferred_element_type=jnp.int32))
-        t = _time(one_shot, x8, w8)
-        rows.append(f"kernel,int8_monolithic,{m},{n},{k},{t:.1f},{flops},"
-                    f"{k * n},1")
+        rec("int8_monolithic", _time(one_shot, x8, w8), flops, k * n,
+            int32_out, 1)
 
+        # plane-fused: one MXU pass over a 2K-wide contraction — the
+        # int_flops stay 2·flops (both planes are evaluated), the issue
+        # count drops to 1.
         nib = jax.jit(nibble_matmul_xla)
-        t = _time(nib, x8, w8)
-        rows.append(f"kernel,w8a8_nibble,{m},{n},{k},{t:.1f},{2 * flops},"
-                    f"{k * n},2")
+        rec("w8a8_nibble", _time(nib, x8, w8), 2 * flops, k * n,
+            int32_out, 1)
 
         lut = jax.jit(lut_matmul_xla)
-        t = _time(lut, x8, w8)
-        rows.append(f"kernel,lut_onehot,{m},{n},{k},{t:.1f},"
-                    f"{flops * 16 + flops},{k * n},1")
+        rec("lut_onehot", _time(lut, x8, w8), flops * 16 + flops, k * n,
+            int32_out, 1)
 
         w4nib = jax.jit(lambda a, wp: nibble_matmul_xla(a, unpack_int4(wp)))
-        t = _time(w4nib, x8, w4p)
-        rows.append(f"kernel,w4a8_nibble_packed,{m},{n},{k},{t:.1f},"
-                    f"{2 * flops},{k * n // 2},2")
-    return rows
+        rec("w4a8_nibble_packed", _time(w4nib, x8, w4p), 2 * flops,
+            k * n // 2, int32_out, 1)
+
+        fused = jax.jit(_fused_dequant_xla)
+        rec("w8a8_nibble_fused_dequant", _time(fused, xf, w8, ws),
+            2 * flops, k * n, bf16_out, 1)
+    return recs
+
+
+def _format_row(rec: dict) -> str:
+    return ("kernel,{design},{M},{N},{K},{us_per_call:.1f},{int_flops},"
+            "{weight_bytes},{out_bytes},{mxu_passes}".format(**rec))
+
+
+def run() -> list[str]:
+    return [_HEADER] + [_format_row(r) for r in run_structured()]
 
 
 if __name__ == "__main__":
-    print("\n".join(run()))
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--json", metavar="PATH", default=None,
+                    help="also dump structured records as JSON")
+    args = ap.parse_args()
+    recs = run_structured()
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(recs, f, indent=1)
+    print(_HEADER)
+    for r in recs:
+        print(_format_row(r))

@@ -6,6 +6,13 @@ for the paper artifact it reproduces.
 
 from __future__ import annotations
 
+import os
+import sys
+
+# Allow `python benchmarks/run.py` from the repo root: the script dir is
+# on sys.path, the package's parent is not.
+sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+
 
 def main() -> None:
     from benchmarks import (fig3_functional, fig4_area_power, kernel_bench,

@@ -87,6 +87,9 @@ class ModelConfig:
 
     # --- execution -----------------------------------------------------------
     quant_mode: str = "dense"          # QuantLinear mode for projections
+    quant_backend: str = "xla"         # "xla" | "pallas" (fused kernels;
+    #   pallas routes projections through ops.quant_matmul with the
+    #   in-kernel dequant epilogue — int32 acc never leaves VMEM)
     remat: bool = True
     norm_eps: float = 1e-6
     attn_impl: str = "chunked"         # "chunked" | "flash" (Pallas kernel)

@@ -60,29 +60,27 @@ def linear_init(key, in_dim: int, out_dim: int,
 
 def nibble_matmul_xla(x_q: jax.Array, w_q: jax.Array,
                       *, w_bits: int = 8) -> jax.Array:
-    """Two-pass nibble matmul on int8 planes, int32 accumulation.
+    """Single-pass plane-concatenated nibble matmul, int32 accumulation.
 
     ``x_q``: (..., K) int8.  ``w_q``: (K, N) int8 (w_bits=8) or int4
     values in int8 storage (w_bits=4).  Returns (..., N) int32.
 
-    This is Algorithm 2 with the vector-lane loop replaced by the MXU:
-    the "precompute logic" pass for the low nibble plane and the high
-    nibble plane are two narrow dot_generals; alignment is the ``<< 4``;
-    accumulation is exact in int32.
+    This is Algorithm 2 with the vector-lane loop replaced by the MXU,
+    and the fixed ``<< 4`` alignment folded into the operand layout: the
+    high plane is pre-shifted at the operand edge (``hi << 4 == x - lo``
+    stays int8-safe) and both planes are concatenated along K, so one
+    ``dot_general`` against the twice-stacked weight evaluates both
+    "deterministic cycles" in a single MXU pass — the same dataflow the
+    Pallas kernels use.
     """
+    del w_bits  # int4-in-int8 storage goes through the identical dot
     x_lo, x_hi = split_nibbles_signed(x_q)          # int32 planes, [0,16) / [-8,8)
-    x_lo = x_lo.astype(jnp.int8)
-    x_hi = x_hi.astype(jnp.int8)
+    x_cat = jnp.concatenate([x_lo, x_hi << 4], axis=-1).astype(jnp.int8)
     w_q = w_q.astype(jnp.int8)
-
-    def dot(a, b):
-        return jax.lax.dot_general(
-            a, b, (((a.ndim - 1,), (0,)), ((), ())),
-            preferred_element_type=jnp.int32)
-
-    acc_lo = dot(x_lo, w_q)                          # PL pass, shift 0
-    acc_hi = dot(x_hi, w_q)                          # PL pass, shift 4
-    return acc_lo + (acc_hi << 4)                    # fixed alignment + add
+    w_cat = jnp.concatenate([w_q, w_q], axis=0)      # shared tile, reused
+    return jax.lax.dot_general(
+        x_cat, w_cat, (((x_cat.ndim - 1,), (0,)), ((), ())),
+        preferred_element_type=jnp.int32)
 
 
 def lut_matmul_xla(x_q: jax.Array, w_q: jax.Array) -> jax.Array:
@@ -145,15 +143,18 @@ def linear_apply(params: dict, x: jax.Array, *,
 
     if backend == "pallas":
         from repro.kernels import ops  # deferred: kernels import pallas
-        if mode == "lut":
-            acc = ops.lut_matmul(x_qt.values, w_qt.values)
-        else:
-            acc = ops.nibble_matmul(x_qt.values, w_qt.values)
+        # single dispatch path; nibble modes fuse the dequant epilogue
+        # in-kernel and emit x.dtype directly (no int32 HBM round-trip)
+        return ops.quant_matmul(
+            x_qt.values, w_qt.values,
+            x_scale=x_qt.scale, w_scale=w_qt.scale.reshape(1, -1),
+            w_format="lut" if mode == "lut" else "int8",
+            out_dtype=x.dtype)
+
+    if mode == "lut":
+        acc = lut_matmul_xla(x_qt.values, w_qt.values)
     else:
-        if mode == "lut":
-            acc = lut_matmul_xla(x_qt.values, w_qt.values)
-        else:
-            acc = nibble_matmul_xla(x_qt.values, w_qt.values, w_bits=w_bits)
+        acc = nibble_matmul_xla(x_qt.values, w_qt.values, w_bits=w_bits)
 
     out = acc.astype(jnp.float32) * x_qt.scale * w_qt.scale.reshape(1, -1)
     return out.astype(x.dtype)

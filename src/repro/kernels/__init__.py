@@ -1,3 +1,15 @@
-# OPTIONAL layer. Add <name>.py (or .cu) + ops.py + ref.py ONLY
-# for compute hot-spots the paper itself optimizes with a custom
-# kernel. Leave this package empty if the paper has none.
+"""Pallas TPU kernels for the paper's multiplier design points.
+
+Layout:
+
+* ``nibble_matmul``     — single-pass plane-fused nibble matmul (the
+                          tentpole kernel: plane-concatenated dot, VMEM
+                          scratch accumulation, fused dequant epilogue)
+* ``lut_matmul``        — LUT/selection design point (one-hot matmul)
+* ``quant_matmul_fused``— bf16→bf16 hot path, shim over the nibble path
+* ``flash_attention``   — flash MHA fwd/bwd
+* ``ops``               — public entry points; ``ops.quant_matmul`` is
+                          the single dispatch path for every quantized
+                          matmul (padding, format, epilogue, backend)
+* ``ref``               — pure-jnp oracles the tests assert against
+"""

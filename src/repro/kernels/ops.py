@@ -3,6 +3,13 @@
 ``interpret`` defaults to auto: interpret-mode on CPU (validation), real
 Mosaic lowering on TPU.  All wrappers accept arbitrary (unaligned)
 shapes and pad to the block grid internally; results are exact.
+
+Every quantized-matmul execution path now routes through one dispatcher,
+:func:`quant_matmul`: weight format (int8 dense / packed int4 / LUT
+selection) and the optional fused dequantization epilogue are arguments,
+not separate entry points.  The seed entry points (``nibble_matmul``,
+``nibble_matmul_w4``, ``lut_matmul``, ``quant_matmul_fused``) remain as
+thin shims over it.
 """
 
 from __future__ import annotations
@@ -13,14 +20,13 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels.lut_matmul import lut_matmul_pallas
-from repro.kernels.nibble_matmul import (
-    nibble_matmul_pallas,
-    nibble_matmul_w4_pallas,
-)
-from repro.kernels.quant_matmul_fused import quant_matmul_fused_pallas
+from repro.kernels.nibble_matmul import fused_nibble_matmul_pallas
+from repro.kernels.quant_matmul_fused import quantize_rows
 
-__all__ = ["nibble_matmul", "nibble_matmul_w4", "lut_matmul",
+__all__ = ["quant_matmul", "nibble_matmul", "nibble_matmul_w4", "lut_matmul",
            "quant_matmul_fused", "flash_mha"]
+
+W_FORMATS = ("int8", "int4_packed", "lut")
 
 
 def _on_tpu() -> bool:
@@ -46,72 +52,131 @@ def _flatten_leading(x):
     return mat, unflatten
 
 
-def nibble_matmul(x_q: jax.Array, w_q: jax.Array, *,
-                  bm: int = 128, bn: int = 128, bk: int = 128,
-                  unroll_passes: bool = True,
-                  interpret: bool | None = None) -> jax.Array:
-    """int8 (..., K) × int8 (K, N) → int32 (..., N) — the paper's kernel."""
+def _row_scale(s, m):
+    """Normalize a scalar / (M,) / (M,1) scale to f32 (M, 1)."""
+    s = jnp.asarray(s, jnp.float32).reshape(-1)[:, None]
+    return jnp.broadcast_to(s, (m, 1))
+
+
+def _col_scale(s, n):
+    """Normalize a scalar / (N,) / (1,N) scale to f32 (1, N)."""
+    s = jnp.asarray(s, jnp.float32).reshape(-1)[None, :]
+    return jnp.broadcast_to(s, (1, n))
+
+
+def quant_matmul(x_q: jax.Array, w: jax.Array, *,
+                 x_scale: jax.Array | None = None,
+                 w_scale: jax.Array | None = None,
+                 w_format: str = "int8",
+                 bm: int = 128, bn: int = 128, bk: int = 128,
+                 out_dtype=None,
+                 interpret: bool | None = None) -> jax.Array:
+    """The single dispatch path for every quantized matmul.
+
+    ``x_q``: int8 (..., K).  ``w``: int8 (K, N) for ``w_format`` "int8"
+    or "lut"; packed int4 (K, N//2) for "int4_packed".
+
+    Unscaled → exact int32 (..., N).  With scales (``x_scale``
+    broadcastable to (M, 1), ``w_scale`` to (1, N)) the dequantization
+    runs as the kernel's final-K-step epilogue and the result is
+    ``out_dtype`` (bf16 by default) — the int32 accumulator never leaves
+    VMEM.  The "lut" format is int32-only (its selection kernel models
+    the paper's LUT array); scales there are applied as an XLA epilog.
+    """
+    if w_format not in W_FORMATS:
+        raise ValueError(f"w_format must be one of {W_FORMATS}: {w_format}")
     if interpret is None:
         interpret = not _on_tpu()
     mat, unflatten = _flatten_leading(x_q)
     m, k = mat.shape
-    n = w_q.shape[1]
+    n = 2 * w.shape[1] if w_format == "int4_packed" else w.shape[1]
+    scaled = x_scale is not None or w_scale is not None
+
     xp = _pad_to(mat, bm, bk)
-    wp = _pad_to(w_q, bk, bn)
-    out = nibble_matmul_pallas(xp, wp, bm=bm, bn=bn, bk=bk,
-                               unroll_passes=unroll_passes,
-                               interpret=interpret)
+    wp = _pad_to(w, bk, bn // 2 if w_format == "int4_packed" else bn)
+
+    if w_format == "lut":
+        out = lut_matmul_pallas(xp, wp, bm=bm, bn=bn, bk=bk,
+                                interpret=interpret)
+        out = out[:m, :n]
+        if scaled:
+            out = out.astype(jnp.float32)
+            if x_scale is not None:
+                out = out * _row_scale(x_scale, m)
+            if w_scale is not None:
+                out = out * _col_scale(w_scale, n)
+            out = out.astype(jnp.bfloat16 if out_dtype is None else out_dtype)
+        elif out_dtype is not None:
+            out = out.astype(out_dtype)
+        return unflatten(out)
+
+    if scaled:
+        xs = jnp.ones((m, 1), jnp.float32) if x_scale is None \
+            else _row_scale(x_scale, m)
+        ws = jnp.ones((1, n), jnp.float32) if w_scale is None \
+            else _col_scale(w_scale, n)
+        xsp = _pad_to(xs, bm, 1)
+        wsp = _pad_to(ws, 1, bn)
+    else:
+        xsp = wsp = None
+
+    out = fused_nibble_matmul_pallas(
+        xp, wp, xsp, wsp,
+        w_packed=(w_format == "int4_packed"),
+        bm=bm, bn=bn, bk=bk, out_dtype=out_dtype, interpret=interpret)
     return unflatten(out[:m, :n])
+
+
+# ---------------------------------------------------------------------------
+# Seed entry points — thin shims over quant_matmul
+# ---------------------------------------------------------------------------
+
+def nibble_matmul(x_q: jax.Array, w_q: jax.Array, *,
+                  bm: int = 128, bn: int = 128, bk: int = 128,
+                  unroll_passes: bool = True,
+                  interpret: bool | None = None) -> jax.Array:
+    """int8 (..., K) × int8 (K, N) → int32 (..., N) — the paper's kernel.
+
+    ``unroll_passes`` is retained for API compatibility; both profiles
+    lower to the plane-concatenated single-pass kernel.
+    """
+    del unroll_passes
+    return quant_matmul(x_q, w_q, w_format="int8", bm=bm, bn=bn, bk=bk,
+                        interpret=interpret)
 
 
 def nibble_matmul_w4(x_q: jax.Array, w_packed: jax.Array, *,
                      bm: int = 128, bn: int = 128, bk: int = 128,
                      interpret: bool | None = None) -> jax.Array:
     """int8 (..., K) × packed-int4 (K, N//2) → int32 (..., N)."""
-    if interpret is None:
-        interpret = not _on_tpu()
-    mat, unflatten = _flatten_leading(x_q)
-    m, k = mat.shape
-    n = 2 * w_packed.shape[1]
-    xp = _pad_to(mat, bm, bk)
-    wp = _pad_to(w_packed, bk, bn // 2)
-    out = nibble_matmul_w4_pallas(xp, wp, bm=bm, bn=bn, bk=bk,
-                                  interpret=interpret)
-    return unflatten(out[:m, :n])
+    return quant_matmul(x_q, w_packed, w_format="int4_packed",
+                        bm=bm, bn=bn, bk=bk, interpret=interpret)
 
 
 def lut_matmul(x_q: jax.Array, w_q: jax.Array, *,
                bm: int = 128, bn: int = 128, bk: int = 128,
                interpret: bool | None = None) -> jax.Array:
     """int8 (..., K) × int8 (K, N) → int32 (..., N) via LUT selection."""
-    if interpret is None:
-        interpret = not _on_tpu()
-    mat, unflatten = _flatten_leading(x_q)
-    m, k = mat.shape
-    n = w_q.shape[1]
-    xp = _pad_to(mat, bm, bk)
-    wp = _pad_to(w_q, bk, bn)
-    out = lut_matmul_pallas(xp, wp, bm=bm, bn=bn, bk=bk, interpret=interpret)
-    return unflatten(out[:m, :n])
+    return quant_matmul(x_q, w_q, w_format="lut", bm=bm, bn=bn, bk=bk,
+                        interpret=interpret)
 
 
 def quant_matmul_fused(x: jax.Array, w_q: jax.Array, w_scale: jax.Array, *,
-                       bm: int = 128, bn: int = 128,
+                       bm: int = 128, bn: int = 128, bk: int = 128,
                        out_dtype=jnp.bfloat16,
                        interpret: bool | None = None) -> jax.Array:
-    """float (..., K) × int8 (K, N) + scales → out_dtype (..., N), fused."""
-    if interpret is None:
-        interpret = not _on_tpu()
+    """float (..., K) × int8 (K, N) + scales → out_dtype (..., N), fused.
+
+    Per-row symmetric int8 activation quantization runs as a cheap XLA
+    prolog on the unpadded rows; the matmul and the scale fold run in the
+    single-pass kernel with the bf16 epilogue (no int32 HBM round-trip).
+    """
     mat, unflatten = _flatten_leading(x)
-    m, k = mat.shape
-    n = w_q.shape[1]
-    # K must stay whole (per-row scale exactness): pad only M and N.
-    xp = _pad_to(mat, bm, 1)
-    wp = _pad_to(w_q, 1, bn)
-    sp = _pad_to(w_scale.reshape(1, -1), 1, bn)
-    out = quant_matmul_fused_pallas(xp, wp, sp, bm=bm, bn=bn,
-                                    out_dtype=out_dtype, interpret=interpret)
-    return unflatten(out[:m, :n])
+    x_q, x_scale = quantize_rows(mat)
+    out = quant_matmul(x_q, w_q, x_scale=x_scale, w_scale=w_scale,
+                       w_format="int8", bm=bm, bn=bn, bk=bk,
+                       out_dtype=out_dtype, interpret=interpret)
+    return unflatten(out)
 
 
 # ---------------------------------------------------------------------------

@@ -26,13 +26,18 @@ def main():
     ap.add_argument("--temperature", type=float, default=0.0)
     ap.add_argument("--quant", default="dense",
                     choices=["dense", "w8a8_nibble", "w4a8_nibble", "lut"])
+    ap.add_argument("--quant-backend", default="xla",
+                    choices=["xla", "pallas"],
+                    help="pallas = fused single-pass kernels "
+                         "(ops.quant_matmul, in-kernel dequant epilogue)")
     args = ap.parse_args()
 
     cfg = reduced(get_config(args.arch)).replace(quant_mode=args.quant)
     params = model_init(jax.random.PRNGKey(0), cfg)
     scfg = ServeConfig(batch=args.batch,
                        max_len=args.prompt_len + args.new_tokens,
-                       temperature=args.temperature)
+                       temperature=args.temperature,
+                       quant_backend=args.quant_backend)
     engine = Engine(cfg, params, scfg)
 
     prompts = jax.random.randint(jax.random.PRNGKey(1),

@@ -181,12 +181,13 @@ def attn_apply(params, cfg, x, *, positions, kind: str = "full",
     b, s, d = x.shape
     h, kvh, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
     quant = cfg.quant_mode
+    qbackend = cfg.quant_backend
 
-    q = linear_apply(params["wq"], x, mode=quant).reshape(b, s, h, hd)
+    q = linear_apply(params["wq"], x, mode=quant, backend=qbackend).reshape(b, s, h, hd)
     kv_in = x if kv_source is None else kv_source
     sk_new = kv_in.shape[1]
-    k = linear_apply(params["wk"], kv_in, mode=quant).reshape(b, sk_new, kvh, hd)
-    v = linear_apply(params["wv"], kv_in, mode=quant).reshape(b, sk_new, kvh, hd)
+    k = linear_apply(params["wk"], kv_in, mode=quant, backend=qbackend).reshape(b, sk_new, kvh, hd)
+    v = linear_apply(params["wv"], kv_in, mode=quant, backend=qbackend).reshape(b, sk_new, kvh, hd)
 
     if cfg.qk_norm:
         q = rms_norm(params["q_norm"], q, cfg.norm_eps)
@@ -266,7 +267,7 @@ def attn_apply(params, cfg, x, *, positions, kind: str = "full",
                              scale=scale, causal=is_causal_self,
                              window=window,
                              softcap=cfg.attn_logit_softcap)
-    out = linear_apply(params["wo"], out.reshape(b, s, h * hd), mode=quant)
+    out = linear_apply(params["wo"], out.reshape(b, s, h * hd), mode=quant, backend=qbackend)
     return out, new_cache
 
 
@@ -361,18 +362,19 @@ def mla_apply(params, cfg, x, *, positions, cache=None, cache_index=None,
     h = cfg.n_heads
     d_nope, d_rope, d_v = cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim
     quant = cfg.quant_mode
+    qbackend = cfg.quant_backend
 
     # --- queries (low-rank) ------------------------------------------------
     q_a = rms_norm(params["q_a_norm"],
-                   linear_apply(params["wq_a"], x, mode=quant), cfg.norm_eps)
-    q = linear_apply(params["wq_b"], q_a, mode=quant) \
+                   linear_apply(params["wq_a"], x, mode=quant, backend=qbackend), cfg.norm_eps)
+    q = linear_apply(params["wq_b"], q_a, mode=quant, backend=qbackend) \
         .reshape(b, s, h, d_nope + d_rope)
     q_nope, q_rope = q[..., :d_nope], q[..., d_nope:]
     sin, cos = rope(positions, d_rope, cfg.rope_theta)
     q_rope = apply_rope(q_rope, sin, cos).astype(x.dtype)
 
     # --- compressed KV -------------------------------------------------------
-    kv_a = linear_apply(params["wkv_a"], x, mode=quant)
+    kv_a = linear_apply(params["wkv_a"], x, mode=quant, backend=qbackend)
     c_kv = rms_norm(params["kv_a_norm"], kv_a[..., :cfg.kv_lora_rank],
                     cfg.norm_eps)
     k_rope_new = kv_a[..., cfg.kv_lora_rank:].reshape(b, s, 1, d_rope)
@@ -401,7 +403,7 @@ def mla_apply(params, cfg, x, *, positions, cache=None, cache_index=None,
                          "k_rope": k_rope_new.astype(jnp.bfloat16)}
 
     # --- decompress K/V (from latent) ---------------------------------------
-    kv = linear_apply(params["wkv_b"], c_kv_f, mode=quant) \
+    kv = linear_apply(params["wkv_b"], c_kv_f, mode=quant, backend=qbackend) \
         .reshape(b, sk, h, d_nope + d_v)
     k_nope, v = kv[..., :d_nope], kv[..., d_nope:]
     k_rope_b = jnp.broadcast_to(k_rope_f[:, :, None, :], (b, sk, h, d_rope))
@@ -425,5 +427,5 @@ def mla_apply(params, cfg, x, *, positions, cache=None, cache_index=None,
     else:
         out = attention_core(q_full.astype(x.dtype), k_full.astype(x.dtype),
                              v, positions, k_pos, scale=scale, causal=True)
-    out = linear_apply(params["wo"], out.reshape(b, s, h * d_v), mode=quant)
+    out = linear_apply(params["wo"], out.reshape(b, s, h * d_v), mode=quant, backend=qbackend)
     return out, new_cache

@@ -68,14 +68,18 @@ def mlp_init(key, d_model: int, d_ff: int) -> dict:
 
 
 def mlp_apply(params: dict, x: jax.Array, *, act: str = "silu",
-              quant_mode: str = "dense") -> jax.Array:
-    g = linear_apply(params["gate"], x, mode=quant_mode)
-    u = linear_apply(params["up"], x, mode=quant_mode)
+              quant_mode: str = "dense",
+              quant_backend: str = "xla") -> jax.Array:
+    g = linear_apply(params["gate"], x, mode=quant_mode,
+                     backend=quant_backend)
+    u = linear_apply(params["up"], x, mode=quant_mode,
+                     backend=quant_backend)
     if act == "gelu":
         g = jax.nn.gelu(g.astype(jnp.float32), approximate=True).astype(x.dtype)
     else:
         g = jax.nn.silu(g.astype(jnp.float32)).astype(x.dtype)
-    return linear_apply(params["down"], g * u, mode=quant_mode)
+    return linear_apply(params["down"], g * u, mode=quant_mode,
+                        backend=quant_backend)
 
 
 # ---------------------------------------------------------------------------

@@ -147,8 +147,9 @@ def mamba_apply(params, cfg, x, *, return_cache: bool = False):
     bsz, s, d = x.shape
     d_in, h, p, g, n, conv_ch = _dims(cfg)
     quant = cfg.quant_mode
+    qbackend = cfg.quant_backend
 
-    proj = linear_apply(params["in_proj"], x, mode=quant)
+    proj = linear_apply(params["in_proj"], x, mode=quant, backend=qbackend)
     z, xbc, dt_raw = _split_proj(cfg, proj)
     xbc, conv_carry = _causal_conv(xbc, params["conv_w"].astype(jnp.float32),
                                    params["conv_b"].astype(jnp.float32))
@@ -172,7 +173,7 @@ def mamba_apply(params, cfg, x, *, return_cache: bool = False):
     y = y.reshape(bsz, s, d_in)
     y = y * jax.nn.silu(z.astype(jnp.float32))         # gated
     y = rms_norm(params["norm"], y.astype(x.dtype), cfg.norm_eps)
-    out = linear_apply(params["out_proj"], y, mode=quant)
+    out = linear_apply(params["out_proj"], y, mode=quant, backend=qbackend)
 
     new_cache = None
     if return_cache:
@@ -194,8 +195,9 @@ def mamba_step(params, cfg, x, cache):
     bsz = x.shape[0]
     d_in, h, p, g, n, conv_ch = _dims(cfg)
     quant = cfg.quant_mode
+    qbackend = cfg.quant_backend
 
-    proj = linear_apply(params["in_proj"], x, mode=quant)
+    proj = linear_apply(params["in_proj"], x, mode=quant, backend=qbackend)
     z, xbc, dt_raw = _split_proj(cfg, proj)
     xbc, conv_carry = _causal_conv(
         xbc, params["conv_w"].astype(jnp.float32),
@@ -223,5 +225,5 @@ def mamba_step(params, cfg, x, cache):
     y = y.reshape(bsz, 1, d_in)
     y = y * jax.nn.silu(z.astype(jnp.float32))
     y = rms_norm(params["norm"], y.astype(x.dtype), cfg.norm_eps)
-    out = linear_apply(params["out_proj"], y, mode=quant)
+    out = linear_apply(params["out_proj"], y, mode=quant, backend=qbackend)
     return out, {"conv": conv_carry.astype(jnp.bfloat16), "ssm": state}

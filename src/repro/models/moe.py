@@ -207,6 +207,7 @@ def moe_apply(params, cfg, x, *, rng=None):
     if cfg.n_shared_experts:
         b, s, d = x.shape
         shared = mlp_apply(params["shared"], x.reshape(b * s, d),
-                           act=cfg.act, quant_mode=cfg.quant_mode)
+                           act=cfg.act, quant_mode=cfg.quant_mode,
+                           quant_backend=cfg.quant_backend)
         out = out + shared.reshape(b, s, d)
     return out, aux

@@ -146,7 +146,8 @@ def _layer_apply(params, cfg: ModelConfig, spec: LayerSpec, x, *,
             out, aux = moe_apply(params["moe"], cfg, h)
         else:
             out = mlp_apply(params["mlp"], h, act=cfg.act,
-                            quant_mode=cfg.quant_mode)
+                            quant_mode=cfg.quant_mode,
+                            quant_backend=cfg.quant_backend)
         x = x + out
     return x, new_cache, aux
 

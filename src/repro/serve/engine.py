@@ -28,6 +28,23 @@ class ServeConfig:
     batch: int
     max_len: int
     temperature: float = 0.0          # 0 = greedy
+    # Serving-time quantization overrides: deploy any checkpoint under a
+    # different execution mode/backend than it was configured with (the
+    # params stay bf16; integer modes quantize on the fly).  ``None``
+    # keeps the model config's setting.  ``quant_backend="pallas"``
+    # routes every projection through ``ops.quant_matmul`` — the
+    # single-pass plane-fused kernel with the in-kernel dequant epilogue.
+    quant_mode: str | None = None
+    quant_backend: str | None = None
+
+
+def _apply_quant_overrides(cfg: ModelConfig, scfg: ServeConfig) -> ModelConfig:
+    updates = {}
+    if scfg.quant_mode is not None:
+        updates["quant_mode"] = scfg.quant_mode
+    if scfg.quant_backend is not None:
+        updates["quant_backend"] = scfg.quant_backend
+    return dataclasses.replace(cfg, **updates) if updates else cfg
 
 
 def make_serve_step(cfg: ModelConfig, scfg: ServeConfig) -> Callable:
@@ -36,6 +53,7 @@ def make_serve_step(cfg: ModelConfig, scfg: ServeConfig) -> Callable:
     ``index`` is a traced scalar — one compilation serves every decode
     position.  Greedy or temperature sampling on-device.
     """
+    cfg = _apply_quant_overrides(cfg, scfg)
 
     def serve_step(params, caches, token, index, rng):
         logits, caches = decode_step(params, cfg, token, caches, index)
@@ -53,7 +71,7 @@ class Engine:
     """Minimal continuous-batching engine for the example drivers."""
 
     def __init__(self, cfg: ModelConfig, params, scfg: ServeConfig):
-        self.cfg = cfg
+        self.cfg = _apply_quant_overrides(cfg, scfg)
         self.params = params
         self.scfg = scfg
         self._step = jax.jit(make_serve_step(cfg, scfg))

@@ -1,9 +1,61 @@
 """Pytest config: no XLA device-count fakery here — smoke tests and
 benches must see the real (single) CPU device; only the dry-run and
-explicitly-marked subprocess tests use placeholder device counts."""
+explicitly-marked subprocess tests use placeholder device counts.
+
+``hypothesis`` is an optional dev dependency (see requirements-dev.txt).
+When it is missing we install a stub into ``sys.modules`` before test
+modules import it, so property-based tests *skip* instead of erroring
+the whole collection.
+"""
+
+
+import sys
+import types
 
 import pytest
 
 
 def pytest_configure(config):
     config.addinivalue_line("markers", "slow: long-running integration test")
+
+
+try:
+    import hypothesis  # noqa: F401
+except ImportError:  # pragma: no cover - exercised only without hypothesis
+    def _given(*_a, **_k):
+        def deco(fn):
+            # zero-arg wrapper (no functools.wraps: pytest must not see
+            # the strategy parameters, or it hunts for fixtures)
+            def wrapper():
+                pytest.skip("hypothesis not installed "
+                            "(pip install -r requirements-dev.txt)")
+            wrapper.__name__ = fn.__name__
+            wrapper.__doc__ = fn.__doc__
+            return wrapper
+        return deco
+
+    def _settings(*_a, **_k):
+        def deco(fn):
+            return fn
+        return deco
+
+    class _FakeStrategy:
+        """Chainable stand-in: absorbs .filter/.map/... at collect time."""
+
+        def __getattr__(self, name):
+            def chain(*_a, **_k):
+                return self
+            return chain
+
+    class _Strategies(types.ModuleType):
+        def __getattr__(self, name):
+            def strategy(*_a, **_k):
+                return _FakeStrategy()
+            return strategy
+
+    _hyp = types.ModuleType("hypothesis")
+    _hyp.given = _given
+    _hyp.settings = _settings
+    _hyp.strategies = _Strategies("hypothesis.strategies")
+    sys.modules["hypothesis"] = _hyp
+    sys.modules["hypothesis.strategies"] = _hyp.strategies

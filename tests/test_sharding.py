@@ -107,6 +107,8 @@ def test_mini_dryrun_subprocess():
             compiled = jax.jit(step, in_shardings=shardings) \\
                 .lower(params, opt, batch).compile()
         cost = compiled.cost_analysis()
+        if isinstance(cost, list):      # older jax: one dict per computation
+            cost = cost[0] if cost else {}
         print(json.dumps({"ok": True, "flops": cost.get("flops", 0.0)}))
     """)
     env = dict(os.environ, PYTHONPATH=os.path.join(REPO, "src"))
