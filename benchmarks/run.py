@@ -16,9 +16,9 @@ sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
 
 def main() -> None:
     from benchmarks import (fig3_functional, fig4_area_power, kernel_bench,
-                            roofline_table, table2_cycles)
+                            roofline_table, serve_bench, table2_cycles)
     for mod in (table2_cycles, fig3_functional, fig4_area_power,
-                kernel_bench, roofline_table):
+                kernel_bench, roofline_table, serve_bench):
         print(f"\n# === {mod.__name__} ===")
         for row in mod.run():
             print(row)

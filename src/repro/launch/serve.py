@@ -1,7 +1,18 @@
-"""Serving launcher: batched prefill + decode on a reduced config.
+"""Serving launcher: continuous-batching engine on a reduced config.
+
+Batch mode (legacy lockstep generate):
 
     PYTHONPATH=src python -m repro.launch.serve --arch qwen3-4b \
         --batch 4 --prompt-len 32 --new-tokens 32 --quant w8a8_nibble
+
+Request-level workloads (continuous batching: per-slot positions, slot
+refill, per-request latency):
+
+    PYTHONPATH=src python -m repro.launch.serve --arch qwen3-4b \
+        --workload staggered --requests 16 --stagger-ms 50
+
+Compile time is reported separately from steady-state throughput (a
+warmup pass triggers every compilation before the timed run).
 """
 
 from __future__ import annotations
@@ -10,48 +21,104 @@ import argparse
 import time
 
 import jax
-import jax.numpy as jnp
 
 from repro.configs import get_config, reduced
 from repro.models import model_init
 from repro.serve import Engine, ServeConfig
 
 
-def main():
+def _build(args):
+    cfg = reduced(get_config(args.arch)).replace(quant_mode=args.quant)
+    params = model_init(jax.random.PRNGKey(0), cfg)
+    scfg = ServeConfig(batch=args.batch,
+                       max_len=args.prompt_len + args.new_tokens,
+                       prefill_len=args.prompt_len,
+                       temperature=args.temperature,
+                       decode_chunk=args.decode_chunk,
+                       quant_backend=args.quant_backend)
+    return cfg, params, Engine(cfg, params, scfg)
+
+
+def run_batch(args, cfg, engine):
+    """Lockstep generate: every slot starts and stops together."""
+    prompts = jax.random.randint(jax.random.PRNGKey(1),
+                                 (args.batch, args.prompt_len), 0,
+                                 cfg.vocab_size)
+    if prompts.shape[0] != engine.scfg.batch:
+        raise ValueError(f"prompt batch {prompts.shape[0]} != engine "
+                         f"slot count {engine.scfg.batch}")
+    # warmup: trigger prefill + decode-chunk compilation before timing
+    t0 = time.perf_counter()
+    engine.generate(prompts, min(args.new_tokens, 2)).block_until_ready()
+    t_compile = time.perf_counter() - t0
+
+    t0 = time.perf_counter()
+    out = engine.generate(prompts, args.new_tokens)
+    out.block_until_ready()
+    dt = time.perf_counter() - t0
+    toks = args.batch * args.new_tokens
+    print(f"arch={cfg.name} quant={args.quant} backend={args.quant_backend} "
+          f"workload=batch")
+    print(f"  compile+warmup: {t_compile:.2f}s   "
+          f"(compilations: {engine.compile_counts})")
+    print(f"  steady-state:   {toks} tokens in {dt:.2f}s "
+          f"({toks / dt:.1f} tok/s, batch={args.batch})")
+    print("  sample token ids:", out[0, -16:].tolist())
+
+
+def run_requests(args, cfg, engine):
+    """Request-level workload: ``uniform`` submits everything at t=0,
+    ``staggered`` spaces arrivals by --stagger-ms (slots refill
+    mid-stream)."""
+    from repro.serve import run_timed_workload
+    stagger = args.stagger_ms / 1000.0 if args.workload == "staggered" else 0.0
+    r = run_timed_workload(engine, cfg.vocab_size, requests=args.requests,
+                           prompt_budget=args.prompt_len,
+                           new_tokens=args.new_tokens, stagger_s=stagger)
+    print(f"arch={cfg.name} quant={args.quant} backend={args.quant_backend} "
+          f"workload={args.workload} requests={args.requests} "
+          f"slots={args.batch}")
+    print(f"  compile+warmup: {r['compile_s']:.2f}s   "
+          f"(compilations: {r['compile_counts']})")
+    print(f"  steady-state:   {r['tokens']} tokens in {r['wall_s']:.2f}s "
+          f"({r['tok_per_s']:.1f} tok/s)")
+    print(f"  request latency p50={r['req_p50_ms']:.0f}ms "
+          f"p99={r['req_p99_ms']:.0f}ms   "
+          f"ttft p50={r['ttft_p50_ms']:.0f}ms")
+
+
+def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="qwen3-4b")
-    ap.add_argument("--batch", type=int, default=4)
-    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--batch", type=int, default=4,
+                    help="decode slot count")
+    ap.add_argument("--prompt-len", type=int, default=32,
+                    help="slot prompt budget (requests pad up to this)")
     ap.add_argument("--new-tokens", type=int, default=32)
     ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--decode-chunk", type=int, default=8,
+                    help="tokens per jitted decode dispatch")
+    ap.add_argument("--workload", default="batch",
+                    choices=["batch", "uniform", "staggered"],
+                    help="batch = lockstep generate; uniform/staggered = "
+                         "request queue with slot refill")
+    ap.add_argument("--requests", type=int, default=8,
+                    help="request count for uniform/staggered workloads")
+    ap.add_argument("--stagger-ms", type=float, default=50.0,
+                    help="arrival spacing for the staggered workload")
     ap.add_argument("--quant", default="dense",
                     choices=["dense", "w8a8_nibble", "w4a8_nibble", "lut"])
     ap.add_argument("--quant-backend", default="xla",
                     choices=["xla", "pallas"],
                     help="pallas = fused single-pass kernels "
                          "(ops.quant_matmul, in-kernel dequant epilogue)")
-    args = ap.parse_args()
+    args = ap.parse_args(argv)
 
-    cfg = reduced(get_config(args.arch)).replace(quant_mode=args.quant)
-    params = model_init(jax.random.PRNGKey(0), cfg)
-    scfg = ServeConfig(batch=args.batch,
-                       max_len=args.prompt_len + args.new_tokens,
-                       temperature=args.temperature,
-                       quant_backend=args.quant_backend)
-    engine = Engine(cfg, params, scfg)
-
-    prompts = jax.random.randint(jax.random.PRNGKey(1),
-                                 (args.batch, args.prompt_len), 0,
-                                 cfg.vocab_size)
-    t0 = time.time()
-    out = engine.generate(prompts, args.new_tokens)
-    out.block_until_ready()
-    dt = time.time() - t0
-    toks = args.batch * args.new_tokens
-    print(f"arch={cfg.name} quant={args.quant} "
-          f"generated {toks} tokens in {dt:.2f}s "
-          f"({toks / dt:.1f} tok/s, batch={args.batch})")
-    print("sample token ids:", out[0, -16:].tolist())
+    cfg, _, engine = _build(args)
+    if args.workload == "batch":
+        run_batch(args, cfg, engine)
+    else:
+        run_requests(args, cfg, engine)
     return 0
 
 

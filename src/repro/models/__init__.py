@@ -5,6 +5,7 @@ from repro.models.transformer import (  # noqa: F401
     encode,
     forward,
     init_caches,
+    merge_slot_caches,
     model_init,
     prefill,
 )

@@ -20,7 +20,7 @@ from repro.core.linear import linear_apply, linear_init
 from repro.models.layers import apply_rope, rms_norm, rms_norm_init, rope
 
 __all__ = ["attn_init", "attn_apply", "mla_init", "mla_apply",
-           "init_kv_cache", "init_mla_cache"]
+           "init_kv_cache", "init_mla_cache", "scatter_cache_rows"]
 
 _NEG_INF = -2.0 ** 30
 
@@ -41,6 +41,32 @@ def unrolled_chunks():
         yield
     finally:
         _UNROLL_CHUNKS = prev
+
+
+# ---------------------------------------------------------------------------
+# Cache row scatter: scalar (whole-batch) or per-slot write positions
+# ---------------------------------------------------------------------------
+
+def scatter_cache_rows(buf, new, index):
+    """Write ``new`` (B, S_new, ...) into ``buf`` (B, L, ...) at ``index``.
+
+    ``index`` is either a scalar (every sequence writes at the same
+    offset — the classic lockstep decode) or a ``(B,)`` int32 vector of
+    per-slot offsets (continuous batching: each slot is an independent
+    sequence at its own position).  The vector case is a vmapped
+    ``dynamic_update_slice`` over the batch axis, so the compiled
+    program is shape-identical for every position assignment.
+    """
+    new = new.astype(buf.dtype)
+    index = jnp.asarray(index)
+    if index.ndim == 0:
+        start = (0, index) + (0,) * (buf.ndim - 2)
+        return jax.lax.dynamic_update_slice(buf, new, start)
+
+    def one(b, n, i):
+        return jax.lax.dynamic_update_slice(b, n, (i,) + (0,) * (b.ndim - 1))
+
+    return jax.vmap(one)(buf, new, index)
 
 
 # ---------------------------------------------------------------------------
@@ -175,8 +201,11 @@ def attn_apply(params, cfg, x, *, positions, kind: str = "full",
 
     * train/prefill: ``cache=None`` → K/V from ``x`` (or ``kv_source``
       for cross-attn); prefill callers build the cache via ``positions``.
-    * decode: ``cache`` given, ``cache_index`` = write offset; the new
-      token's K/V are scattered in and attention runs against the cache.
+    * decode: ``cache`` given, ``cache_index`` = write offset (scalar,
+      or a ``(B,)`` vector of per-slot offsets for continuous batching);
+      the new token's K/V are scattered in and attention runs against
+      the cache with per-slot causal masking (``positions`` carries each
+      slot's query position).
     """
     b, s, d = x.shape
     h, kvh, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
@@ -209,20 +238,19 @@ def attn_apply(params, cfg, x, *, positions, kind: str = "full",
 
     new_cache = cache
     if cache is not None:
-        # decode: scatter the new K/V at cache_index, attend to the cache
+        # decode: scatter the new K/V at cache_index (scalar or per-slot
+        # vector), attend to the cache
         quant_kv = "k_scale" in cache
         if quant_kv:
             kq, ks = _q8_heads(k)
             vq, vs = _q8_heads(v)
             new_cache = {
-                "k": jax.lax.dynamic_update_slice(
-                    cache["k"], kq, (0, cache_index, 0, 0)),
-                "v": jax.lax.dynamic_update_slice(
-                    cache["v"], vq, (0, cache_index, 0, 0)),
-                "k_scale": jax.lax.dynamic_update_slice(
-                    cache["k_scale"], ks, (0, cache_index, 0, 0)),
-                "v_scale": jax.lax.dynamic_update_slice(
-                    cache["v_scale"], vs, (0, cache_index, 0, 0)),
+                "k": scatter_cache_rows(cache["k"], kq, cache_index),
+                "v": scatter_cache_rows(cache["v"], vq, cache_index),
+                "k_scale": scatter_cache_rows(cache["k_scale"], ks,
+                                              cache_index),
+                "v_scale": scatter_cache_rows(cache["v_scale"], vs,
+                                              cache_index),
             }
             k_full = (new_cache["k"].astype(jnp.float32)
                       * new_cache["k_scale"]).astype(x.dtype)
@@ -230,12 +258,8 @@ def attn_apply(params, cfg, x, *, positions, kind: str = "full",
                       * new_cache["v_scale"]).astype(x.dtype)
             k_cache = new_cache["k"]
         else:
-            k_cache = jax.lax.dynamic_update_slice(
-                cache["k"], k.astype(cache["k"].dtype),
-                (0, cache_index, 0, 0))
-            v_cache = jax.lax.dynamic_update_slice(
-                cache["v"], v.astype(cache["v"].dtype),
-                (0, cache_index, 0, 0))
+            k_cache = scatter_cache_rows(cache["k"], k, cache_index)
+            v_cache = scatter_cache_rows(cache["v"], v, cache_index)
             new_cache = {"k": k_cache, "v": v_cache}
             k_full, v_full = k_cache, v_cache
         k_pos = jnp.broadcast_to(jnp.arange(k_cache.shape[1])[None, :],
@@ -385,12 +409,9 @@ def mla_apply(params, cfg, x, *, positions, cache=None, cache_index=None,
 
     new_cache = cache
     if cache is not None:
-        c_kv_f = jax.lax.dynamic_update_slice(
-            cache["c_kv"], c_kv.astype(cache["c_kv"].dtype),
-            (0, cache_index, 0))
-        k_rope_f = jax.lax.dynamic_update_slice(
-            cache["k_rope"], k_rope_new.astype(cache["k_rope"].dtype),
-            (0, cache_index, 0))
+        c_kv_f = scatter_cache_rows(cache["c_kv"], c_kv, cache_index)
+        k_rope_f = scatter_cache_rows(cache["k_rope"], k_rope_new,
+                                      cache_index)
         new_cache = {"c_kv": c_kv_f, "k_rope": k_rope_f}
         sk = c_kv_f.shape[1]
         k_pos = jnp.broadcast_to(jnp.arange(sk)[None, :], (b, sk))

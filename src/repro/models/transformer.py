@@ -361,15 +361,30 @@ def init_caches(cfg: ModelConfig, batch: int, max_len: int) -> dict:
 
 
 def prefill(params, cfg: ModelConfig, tokens, *, extra_embeds=None,
-            frames=None, max_len: int | None = None):
-    """Run the prompt, return (last-position logits, caches, enc_out)."""
+            frames=None, max_len: int | None = None, logits_index=None):
+    """Run the prompt, return (next-token logits, caches, enc_out).
+
+    ``logits_index`` selects which position's logits to return (default:
+    the last).  It may be a traced scalar or ``(B,)`` vector, which is
+    what lets a serving engine prefill prompts *padded* to a fixed slot
+    budget — the real prompt length is data, not shape, so one
+    compilation serves every request.  (Cache rows written by the pad
+    tokens are harmless: decode overwrites row ``p`` before any query
+    can attend to it.)
+    """
     enc_out = encode(params, cfg, frames) if frames is not None else None
     x = _embed_inputs(params, cfg, tokens, extra_embeds)
     b, s, _ = x.shape
     pos = jnp.broadcast_to(jnp.arange(s)[None, :], (b, s))
     x, caches, _ = _stack_apply(params["stack"], cfg, x, positions=pos,
                                 enc_out=enc_out, mode="prefill")
-    logits = _logits(params, cfg, x[:, -1:])
+    if logits_index is None:
+        x_last = x[:, -1:]
+    else:
+        idx = jnp.broadcast_to(jnp.asarray(logits_index, jnp.int32)
+                               .reshape(-1), (b,))
+        x_last = jnp.take_along_axis(x, idx[:, None, None], axis=1)
+    logits = _logits(params, cfg, x_last)
     if max_len is not None and max_len > s:
         caches = _grow_caches(cfg, caches, s, max_len)
     return logits, caches, enc_out
@@ -380,6 +395,17 @@ def prefill(params, cfg: ModelConfig, tokens, *, extra_embeds=None,
 _SEQ_CACHE_KEYS = {"k", "v", "c_kv", "k_rope", "k_scale", "v_scale"}
 
 
+def _is_block_leaf(path) -> bool:
+    """True when a cache-tree path points inside the scanned-block
+    subtree, whose leaves carry a leading ``n_blocks`` axis.  The cache
+    tree is ``{"prefix": [...], "blocks": {...}, "suffix": [...]}``, so
+    the top-level dict key decides the layout — structurally, never by
+    comparing coincidental sizes (``batch == prompt_len`` makes axis 1
+    of a block-stacked leaf look like a sequence axis)."""
+    head = path[0]
+    return isinstance(head, jax.tree_util.DictKey) and head.key == "blocks"
+
+
 def _grow_caches(cfg, caches, cur_len, max_len):
     """Pad prefill KV caches out to the decode budget (key-aware: SSM
     conv/state caches have no sequence axis and are left alone)."""
@@ -387,8 +413,8 @@ def _grow_caches(cfg, caches, cur_len, max_len):
         key = path[-1].key if hasattr(path[-1], "key") else None
         if key not in _SEQ_CACHE_KEYS:
             return a
-        # seq axis is 1 for per-layer caches, 2 for block-stacked ones
-        axis = 1 if a.shape[1] == cur_len else 2
+        # seq axis: 1 for per-layer caches, 2 under the block-stack axis
+        axis = 2 if _is_block_leaf(path) else 1
         pad_width = [(0, 0)] * a.ndim
         pad_width[axis] = (0, max_len - cur_len)
         return jnp.pad(a, pad_width)
@@ -396,13 +422,38 @@ def _grow_caches(cfg, caches, cur_len, max_len):
     return jax.tree_util.tree_map_with_path(pad_leaf, caches)
 
 
+def merge_slot_caches(big, one, slot):
+    """Scatter a single-sequence cache tree into slot ``slot`` of a
+    batched cache tree (same max_len; ``one`` has batch 1 where ``big``
+    has batch B).  The batch axis is found structurally: axis 0 for
+    prefix/suffix leaves, axis 1 under the block-stack leading axis."""
+    def put(path, b_leaf, s_leaf):
+        b_ax = 1 if _is_block_leaf(path) else 0
+        start = [0] * b_leaf.ndim
+        start[b_ax] = slot
+        return jax.lax.dynamic_update_slice(
+            b_leaf, s_leaf.astype(b_leaf.dtype), tuple(start))
+
+    return jax.tree_util.tree_map_with_path(put, big, one)
+
+
 def decode_step(params, cfg: ModelConfig, token, caches, index, *,
                 enc_out=None):
-    """One decode step.  token: (B, 1) int32; index: scalar position."""
+    """One decode step.  token: (B, 1) int32.
+
+    ``index`` is the cache write position — a scalar (every sequence at
+    the same position, the lockstep special case) or a ``(B,)`` int32
+    vector of *per-slot* positions (continuous batching: each batch slot
+    is an independent sequence).  Positions are data, not shape: both
+    forms compile once and serve every position assignment.  Attention
+    caches scatter per slot; mamba layers carry per-sequence recurrent
+    state and never index by position, so their semantics are unchanged.
+    """
     x = embed_apply(params["embed"], token,
                     scale_by_sqrt_dim=cfg.emb_scale_by_sqrt_dim)
     b = x.shape[0]
-    pos = jnp.broadcast_to(jnp.asarray(index)[None, None], (b, 1))
+    index = jnp.asarray(index, jnp.int32)
+    pos = jnp.broadcast_to(index.reshape(-1, 1), (b, 1))
     x, new_caches, _ = _stack_apply(params["stack"], cfg, x, positions=pos,
                                     caches=caches, cache_index=index,
                                     enc_out=enc_out, mode="decode")

@@ -1,1 +1,7 @@
-from repro.serve.engine import Engine, ServeConfig, make_serve_step  # noqa: F401
+from repro.serve.engine import (  # noqa: F401
+    Engine,
+    Request,
+    ServeConfig,
+    make_serve_step,
+)
+from repro.serve.workload import run_timed_workload  # noqa: F401

@@ -1,33 +1,72 @@
-"""Serving: batched prefill→decode engine + the jit-able ``serve_step``.
+"""Slot-based continuous-batching serve engine.
 
-``make_serve_step`` builds the function the decode dry-run cells lower:
-one new token for every sequence in the batch against a seq_len-sized
-KV cache (exactly the ``decode_32k`` / ``long_500k`` shape semantics).
+The paper treats each vector lane as an independent low-precision
+element sharing one datapath; the serving analogue implemented here
+treats each batch slot as an independent *sequence* sharing one compiled
+program.  Concretely:
 
-The engine adds continuous batching on top for the example scripts:
-requests at different positions share the cache; finished slots are
-refilled without recompiling (positions are data, not shape).
+* **Per-slot decode positions.**  ``decode_step`` takes a ``(B,)``
+  position vector, so every slot decodes at its own offset — positions
+  are data, not shape, and one compilation serves every mix of request
+  lengths.
+* **Prefill into a free slot.**  A new request is prefilled alone
+  (batch 1), padded to the slot prompt budget (``prefill_len``), and its
+  caches are scattered into the free slot of the shared batched cache
+  (``merge_slot_caches``).  Pad-token cache rows are harmless: decode
+  overwrites row ``p`` before any query can attend to it.
+* **Per-slot completion.**  Each slot tracks its own remaining-token
+  budget and optional ``eos_id``; finished slots are refilled from the
+  request queue between decode chunks without recompiling anything
+  (``Engine.compile_counts`` stays at one entry per function).
+* **Jitted multi-token decode.**  The inner loop is a ``lax.scan`` over
+  ``decode_chunk`` tokens inside a single ``jax.jit`` — one dispatch
+  per chunk, not per token.
+* **Sampling.**  Every generated token, including the first one after
+  prefill, goes through the same temperature/greedy path.
+
+Limits (tracked in ROADMAP "Open items"): the KV cache is a dense
+per-slot ``max_len`` slab (no paging), the queue is FIFO (no request
+priorities), and models with mamba mixers prefill at exact prompt length
+(end-padding would pollute the SSM state), which recompiles per distinct
+prompt length.
+
+``make_serve_step`` remains the single-token jit-able step the decode
+dry-run cells lower.
 """
 
 from __future__ import annotations
 
 import dataclasses
+import time
 from typing import Callable
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.configs.base import ModelConfig
-from repro.models import decode_step, init_caches, prefill
+from repro.models import (
+    decode_step,
+    init_caches,
+    merge_slot_caches,
+    prefill,
+)
 
-__all__ = ["ServeConfig", "make_serve_step", "Engine"]
+__all__ = ["ServeConfig", "Request", "make_serve_step", "Engine"]
 
 
 @dataclasses.dataclass(frozen=True)
 class ServeConfig:
-    batch: int
-    max_len: int
+    batch: int                        # concurrent decode slots
+    max_len: int                      # per-slot cache budget (tokens)
     temperature: float = 0.0          # 0 = greedy
+    eos_id: int = -1                  # -1 = no EOS (length-only stopping)
+    prefill_len: int = 0              # slot prompt budget: prompts are
+    #   padded to this length so one prefill compilation serves every
+    #   request.  0 = prefill at exact prompt length (recompiles per
+    #   distinct length; always used for mamba-mixer models, where
+    #   end-padding would corrupt the recurrent state).
+    decode_chunk: int = 8             # tokens per jitted scan dispatch
     # Serving-time quantization overrides: deploy any checkpoint under a
     # different execution mode/backend than it was configured with (the
     # params stay bf16; integer modes quantize on the fly).  ``None``
@@ -36,6 +75,22 @@ class ServeConfig:
     # single-pass plane-fused kernel with the in-kernel dequant epilogue.
     quant_mode: str | None = None
     quant_backend: str | None = None
+
+
+@dataclasses.dataclass
+class Request:
+    """One generation request (host-side bookkeeping)."""
+    id: int
+    prompt: np.ndarray                # (S,) int32
+    max_new_tokens: int
+    arrival: float = 0.0              # seconds after Engine.run() starts
+    tokens: list = dataclasses.field(default_factory=list)  # generated
+    t_first: float = -1.0             # time to first token (from run t0)
+    t_done: float = -1.0
+
+    @property
+    def text_len(self) -> int:
+        return len(self.prompt) + len(self.tokens)
 
 
 def _apply_quant_overrides(cfg: ModelConfig, scfg: ServeConfig) -> ModelConfig:
@@ -47,49 +102,287 @@ def _apply_quant_overrides(cfg: ModelConfig, scfg: ServeConfig) -> ModelConfig:
     return dataclasses.replace(cfg, **updates) if updates else cfg
 
 
-def make_serve_step(cfg: ModelConfig, scfg: ServeConfig) -> Callable:
-    """serve_step(params, caches, token, index) → (next_token, caches).
-
-    ``index`` is a traced scalar — one compilation serves every decode
-    position.  Greedy or temperature sampling on-device.
-    """
-    cfg = _apply_quant_overrides(cfg, scfg)
-
-    def serve_step(params, caches, token, index, rng):
-        logits, caches = decode_step(params, cfg, token, caches, index)
-        logits = logits[:, -1].astype(jnp.float32)
+def _sampler(scfg: ServeConfig) -> Callable:
+    """(B, V) logits → (B,) int32 token, greedy or temperature."""
+    def sample(logits, rng):
+        logits = logits.astype(jnp.float32)
         if scfg.temperature > 0.0:
             nxt = jax.random.categorical(rng, logits / scfg.temperature)
         else:
             nxt = jnp.argmax(logits, axis=-1)
-        return nxt[:, None].astype(jnp.int32), caches
+        return nxt.astype(jnp.int32)
+
+    return sample
+
+
+def make_serve_step(cfg: ModelConfig, scfg: ServeConfig) -> Callable:
+    """serve_step(params, caches, token, index, rng) → (next_token, caches).
+
+    ``index`` is a traced scalar *or* ``(B,)`` per-slot position vector —
+    one compilation serves every decode position assignment.  Greedy or
+    temperature sampling on-device.
+    """
+    cfg = _apply_quant_overrides(cfg, scfg)
+    sample = _sampler(scfg)
+
+    def serve_step(params, caches, token, index, rng):
+        logits, caches = decode_step(params, cfg, token, caches, index)
+        nxt = sample(logits[:, -1], rng)
+        return nxt[:, None], caches
 
     return serve_step
 
 
 class Engine:
-    """Minimal continuous-batching engine for the example drivers."""
+    """Continuous-batching engine: request queue + slot refill + chunked
+    jitted decode.  See the module docstring for the execution model."""
 
     def __init__(self, cfg: ModelConfig, params, scfg: ServeConfig):
+        if scfg.prefill_len > scfg.max_len:
+            raise ValueError(f"prefill_len {scfg.prefill_len} exceeds "
+                             f"max_len {scfg.max_len}")
+        if scfg.decode_chunk < 1:
+            raise ValueError(f"decode_chunk must be >= 1, got "
+                             f"{scfg.decode_chunk}")
         self.cfg = _apply_quant_overrides(cfg, scfg)
         self.params = params
         self.scfg = scfg
-        self._step = jax.jit(make_serve_step(cfg, scfg))
+        specs = (*cfg.prefix_pattern, *cfg.block_pattern,
+                 *cfg.suffix_pattern)
+        self._has_mamba = any(s.mixer == "mamba" for s in specs)
+        # the cache slab is donated: both stages rebind it from the
+        # return value, so the update happens in place instead of
+        # copying every unmodified row of (batch × max_len × layers)
+        self._prefill_fn = jax.jit(self._build_prefill(), donate_argnums=1)
+        self._chunk_fn = jax.jit(self._build_decode_chunk(),
+                                 donate_argnums=1)
+        self._caches = init_caches(self.cfg, scfg.batch, scfg.max_len)
+        self._next_id = 0
+        self.reset()
+
+    # ------------------------------------------------------------------
+    # compiled stages
+    # ------------------------------------------------------------------
+
+    def _build_prefill(self):
+        cfg, scfg = self.cfg, self.scfg
+        sample = _sampler(scfg)
+
+        def prefill_into_slot(params, caches, prompt, prompt_len, slot, rng):
+            """prompt: (1, P) — padded; prompt_len/slot: traced scalars."""
+            logits, one, _ = prefill(params, cfg, prompt,
+                                     max_len=scfg.max_len,
+                                     logits_index=prompt_len - 1)
+            caches = merge_slot_caches(caches, one, slot)
+            first = sample(logits[:, -1], rng)[0]
+            return caches, first
+
+        return prefill_into_slot
+
+    def _build_decode_chunk(self):
+        cfg, scfg = self.cfg, self.scfg
+        sample = _sampler(scfg)
+        max_pos = scfg.max_len - 1
+
+        def chunk(params, caches, token, positions, active, remaining, rng):
+            """Scan ``decode_chunk`` tokens; inactive slots are frozen
+            (their rewrites of already-written cache rows are idempotent)
+            and emit -1."""
+            def body(carry, _):
+                caches, token, positions, active, remaining, rng = carry
+                rng, sub = jax.random.split(rng)
+                logits, caches = decode_step(params, cfg, token, caches,
+                                             positions)
+                nxt = sample(logits[:, -1], sub)
+                emitted = jnp.where(active, nxt, -1)
+                remaining = remaining - active.astype(jnp.int32)
+                alive = remaining > 0
+                if scfg.eos_id >= 0:
+                    alive = alive & (nxt != scfg.eos_id)
+                new_active = active & alive
+                positions = jnp.where(
+                    active, jnp.minimum(positions + 1, max_pos), positions)
+                token = jnp.where(active[:, None], nxt[:, None], token)
+                carry = (caches, token, positions, new_active, remaining,
+                         rng)
+                return carry, (emitted, active)
+
+            init = (caches, token, positions, active, remaining, rng)
+            carry, (toks, valid) = jax.lax.scan(
+                body, init, None, length=scfg.decode_chunk)
+            return carry + (toks, valid)
+
+        return chunk
+
+    # ------------------------------------------------------------------
+    # host-side state
+    # ------------------------------------------------------------------
+
+    def reset(self, rng=None) -> None:
+        """Clear queue/slots (compiled functions and cache buffers are
+        kept — stale cache rows are invisible: decode overwrites row
+        ``p`` before any query can attend to it)."""
+        b = self.scfg.batch
+        self._rng = rng if rng is not None else jax.random.PRNGKey(0)
+        self._queue: list[Request] = []
+        self._slots: list[Request | None] = [None] * b
+        self._token = np.zeros((b, 1), np.int32)
+        self._positions = np.zeros((b,), np.int32)
+        self._active = np.zeros((b,), bool)
+        self._remaining = np.zeros((b,), np.int32)
+        self._finished: dict[int, Request] = {}
+
+    @property
+    def compile_counts(self) -> dict:
+        """Compilations per stage — the refill-without-recompile claim
+        is checkable: counts stay at 1 across arbitrary request mixes
+        (given a fixed ``prefill_len`` slot budget)."""
+        def count(fn):
+            # _cache_size is jax-private; report -1 rather than crash
+            # the engine if an upgrade moves it
+            return getattr(fn, "_cache_size", lambda: -1)()
+
+        return {"prefill": count(self._prefill_fn),
+                "decode_chunk": count(self._chunk_fn)}
+
+    def submit(self, prompt, max_new_tokens: int, arrival: float = 0.0) -> int:
+        """Queue one request; returns its id.  ``arrival`` (seconds from
+        ``run()`` start) models staggered workloads — the request is not
+        admitted to a slot before its arrival time."""
+        prompt = np.asarray(prompt, np.int32).reshape(-1)
+        scfg = self.scfg
+        if max_new_tokens < 1:
+            raise ValueError(f"max_new_tokens must be >= 1, got "
+                             f"{max_new_tokens}")
+        if prompt.size == 0 or prompt.size >= scfg.max_len:
+            raise ValueError(f"prompt length {prompt.size} must be in "
+                             f"[1, max_len={scfg.max_len})")
+        if scfg.prefill_len and prompt.size > scfg.prefill_len \
+                and not self._has_mamba:
+            raise ValueError(f"prompt length {prompt.size} exceeds the "
+                             f"slot budget prefill_len={scfg.prefill_len}")
+        max_new_tokens = min(max_new_tokens, scfg.max_len - prompt.size)
+        req = Request(id=self._next_id, prompt=prompt,
+                      max_new_tokens=max_new_tokens, arrival=arrival)
+        self._next_id += 1
+        self._queue.append(req)
+        self._queue.sort(key=lambda r: r.arrival)
+        return req.id
+
+    # ------------------------------------------------------------------
+    # scheduling loop
+    # ------------------------------------------------------------------
+
+    def _admit(self, now: float) -> None:
+        """Prefill arrived requests into free slots (FIFO)."""
+        for slot in range(self.scfg.batch):
+            if self._slots[slot] is not None or not self._queue:
+                continue
+            if self._queue[0].arrival > now:
+                break
+            req = self._queue.pop(0)
+            p_len = int(req.prompt.size)
+            if self._has_mamba or not self.scfg.prefill_len:
+                pad_len = p_len          # exact-length prefill
+            else:
+                pad_len = self.scfg.prefill_len
+            padded = np.zeros((1, pad_len), np.int32)
+            padded[0, :p_len] = req.prompt
+            self._rng, sub = jax.random.split(self._rng)
+            self._caches, first = self._prefill_fn(
+                self.params, self._caches, jnp.asarray(padded), p_len,
+                slot, sub)
+            tok = int(first)
+            req.tokens.append(tok)
+            req.t_first = time.perf_counter() - self._t0
+            done = (req.max_new_tokens <= 1
+                    or (self.scfg.eos_id >= 0 and tok == self.scfg.eos_id))
+            if done:
+                self._finish(req)
+            else:
+                self._slots[slot] = req
+                self._token[slot, 0] = tok
+                self._positions[slot] = p_len
+                self._active[slot] = True
+                self._remaining[slot] = req.max_new_tokens - 1
+
+    def _finish(self, req: Request) -> None:
+        req.t_done = time.perf_counter() - self._t0
+        self._finished[req.id] = req
+
+    def _run_chunk(self) -> None:
+        (self._caches, token, positions, active, remaining, self._rng,
+         toks, valid) = self._chunk_fn(
+            self.params, self._caches, jnp.asarray(self._token),
+            jnp.asarray(self._positions), jnp.asarray(self._active),
+            jnp.asarray(self._remaining), self._rng)
+        self._token = np.array(token)        # copies: host state is mutable
+        self._positions = np.array(positions)
+        self._active = np.array(active)
+        self._remaining = np.array(remaining)
+        toks, valid = np.asarray(toks), np.asarray(valid)
+        for slot, req in enumerate(self._slots):
+            if req is None:
+                continue
+            for t in range(toks.shape[0]):
+                if not valid[t, slot]:
+                    break
+                tok = int(toks[t, slot])
+                req.tokens.append(tok)
+                if (len(req.tokens) >= req.max_new_tokens
+                        or (self.scfg.eos_id >= 0
+                            and tok == self.scfg.eos_id)):
+                    self._finish(req)
+                    self._slots[slot] = None
+                    break
+
+    def run(self) -> dict[int, Request]:
+        """Drain the queue: admit → chunked decode → refill, until every
+        submitted request has finished.  Returns {id: Request} with
+        per-request timing (t_first / t_done relative to run start)."""
+        self._t0 = time.perf_counter()
+        while self._queue or any(r is not None for r in self._slots):
+            now = time.perf_counter() - self._t0
+            self._admit(now)
+            if not self._active.any():
+                if self._queue:   # idle until the next arrival
+                    wait = self._queue[0].arrival \
+                        - (time.perf_counter() - self._t0)
+                    if wait > 0:
+                        time.sleep(min(wait, 0.05))
+                    continue
+                break
+            self._run_chunk()
+        out, self._finished = self._finished, {}
+        return out
+
+    # ------------------------------------------------------------------
+    # batch convenience API (examples / tests)
+    # ------------------------------------------------------------------
 
     def generate(self, prompts: jax.Array, n_new: int,
                  rng=None) -> jax.Array:
-        """prompts: (B, S) int32 → (B, S + n_new) tokens."""
-        cfg, scfg = self.cfg, self.scfg
-        rng = rng if rng is not None else jax.random.PRNGKey(0)
+        """prompts: (B, S) int32 → (B, S + n_new) tokens.
+
+        Uniform-workload wrapper over submit/run: B must equal the slot
+        count and every request decodes exactly ``n_new`` tokens, so
+        the output is rectangular (build the engine with the default
+        ``eos_id=-1``; early EOS stops raise)."""
+        prompts = np.asarray(prompts, np.int32)
         b, s = prompts.shape
-        logits, caches, _ = prefill(self.params, cfg, prompts,
-                                    max_len=scfg.max_len)
-        token = jnp.argmax(logits[:, -1].astype(jnp.float32),
-                           axis=-1)[:, None].astype(jnp.int32)
-        out = [prompts, token]
-        for i in range(n_new - 1):
-            rng, sub = jax.random.split(rng)
-            token, caches = self._step(self.params, caches, token,
-                                       s + i, sub)
-            out.append(token)
-        return jnp.concatenate(out, axis=1)
+        if b != self.scfg.batch:
+            raise ValueError(f"prompts batch {b} != ServeConfig.batch "
+                             f"{self.scfg.batch}")
+        if s + n_new > self.scfg.max_len:
+            raise ValueError(f"prompt_len {s} + n_new {n_new} exceeds "
+                             f"max_len {self.scfg.max_len}")
+        self.reset(rng=rng if rng is not None else jax.random.PRNGKey(0))
+        ids = [self.submit(prompts[i], n_new) for i in range(b)]
+        done = self.run()
+        if any(len(done[i].tokens) != n_new for i in ids):
+            raise RuntimeError(
+                "generate() needs rectangular output but EOS stopped a "
+                "request early; use submit()/run() for ragged workloads")
+        gen = np.stack([np.asarray(done[i].tokens, np.int32) for i in ids])
+        return jnp.concatenate([jnp.asarray(prompts), jnp.asarray(gen)],
+                               axis=1)

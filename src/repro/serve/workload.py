@@ -1,0 +1,65 @@
+"""Timed request-level workload driver for the serve engine.
+
+One harness shared by the serving launcher (``repro.launch.serve
+--workload uniform|staggered``) and the serving benchmark
+(``benchmarks/serve_bench.py``), so the warmup protocol and the latency
+definitions cannot drift apart:
+
+* warmup: one short request end-to-end (compiles prefill + decode
+  chunk), timed separately as ``compile_s``, then ``engine.reset()``;
+* request latency = arrival → completion; ttft = arrival → first token;
+* ``tok_per_s`` counts generated tokens over the timed ``run()`` wall
+  clock (for staggered workloads that includes arrival gaps — the
+  continuous-batching question is how much refill recovers of them).
+"""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+__all__ = ["run_timed_workload"]
+
+
+def run_timed_workload(engine, vocab_size: int, *, requests: int,
+                       prompt_budget: int, new_tokens: int,
+                       stagger_s: float = 0.0, seed: int = 0) -> dict:
+    """Submit ``requests`` random prompts (lengths in
+    [prompt_budget/2, prompt_budget], arrivals spaced ``stagger_s``
+    apart), drain the engine, and return throughput/latency stats."""
+    rng = np.random.default_rng(seed)
+    lens = rng.integers(max(2, prompt_budget // 2), prompt_budget + 1,
+                        requests)
+
+    # warmup: trigger every compilation outside the timed window
+    engine.submit(rng.integers(0, vocab_size, int(lens[0])), 2)
+    t0 = time.perf_counter()
+    engine.run()
+    compile_s = time.perf_counter() - t0
+    engine.reset()
+
+    ids = [engine.submit(rng.integers(0, vocab_size, int(n)), new_tokens,
+                         arrival=i * stagger_s)
+           for i, n in enumerate(lens)]
+    t0 = time.perf_counter()
+    done = engine.run()
+    wall = time.perf_counter() - t0
+
+    toks = sum(len(done[i].tokens) for i in ids)
+    lat = np.asarray([done[i].t_done - done[i].arrival for i in ids])
+    ttft = np.asarray([done[i].t_first - done[i].arrival for i in ids])
+    return {
+        "requests": requests,
+        "slots": engine.scfg.batch,
+        "prompt_budget": prompt_budget,
+        "new_tokens": new_tokens,
+        "tokens": toks,
+        "wall_s": round(wall, 3),
+        "tok_per_s": round(toks / wall, 1),
+        "req_p50_ms": round(float(np.percentile(lat, 50)) * 1e3, 1),
+        "req_p99_ms": round(float(np.percentile(lat, 99)) * 1e3, 1),
+        "ttft_p50_ms": round(float(np.percentile(ttft, 50)) * 1e3, 1),
+        "compile_s": round(compile_s, 2),
+        "compile_counts": engine.compile_counts,
+    }

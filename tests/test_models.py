@@ -139,3 +139,33 @@ def test_moe_active_params():
     cfg = get_config("deepseek_v3_671b")
     active = cfg.param_count(active_only=True) / 1e9
     assert 25.0 <= active <= 55.0, active   # ~37B active
+
+
+def test_grow_caches_batch_equals_prompt_len():
+    """Regression: _grow_caches used to pick the pad axis by comparing
+    sizes (``axis = 1 if shape[1] == cur_len else 2``) — with
+    ``batch == prompt_len`` that padded the *batch* axis of block-stacked
+    leaves and corrupted the cache.  Axis detection is now structural
+    (block-stack subtree ⇒ seq axis 2)."""
+    cfg = reduced(get_config("yi_6b"))
+    b = s = 4                       # the coincidence that broke it
+    max_len = 10
+    tokens = jax.random.randint(jax.random.PRNGKey(0), (b, s + 2), 0,
+                                cfg.vocab_size)
+    params = model_init(jax.random.PRNGKey(1), cfg)
+    _, caches, _ = prefill(params, cfg, tokens[:, :s], max_len=max_len)
+
+    k = caches["blocks"]["0"]["attn"]["k"]
+    assert k.shape[1] == b, k.shape        # batch axis NOT padded
+    assert k.shape[2] == max_len, k.shape  # seq axis grown to budget
+
+    # functional check: teacher-forced decode on the grown cache must
+    # match the parallel forward pass (a corrupted cache cannot)
+    full, _ = forward(params, cfg, tokens)
+    got, want = [], np.asarray(full[:, s:].astype(jnp.float32))
+    for t in range(s, s + 2):
+        lg, caches = decode_step(params, cfg, tokens[:, t:t + 1], caches, t)
+        got.append(np.asarray(lg[:, -1].astype(jnp.float32)))
+    got = np.stack(got, axis=1)
+    rel = np.abs(got - want).max() / max(np.abs(want).max(), 1e-6)
+    assert rel < 0.05, rel
