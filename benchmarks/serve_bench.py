@@ -9,11 +9,16 @@ the continuous-batching engine, per workload shape:
                   refill mid-stream (the continuous-batching case; the
                   per-slot position vector is what makes it possible).
 
-Grid: {dense, w8a8_nibble} × {xla, pallas} × {uniform, staggered} on a
-reduced config.  CPU wall-clock is a functional proxy (pallas runs in
-interpret mode — correctness, not speed); the uniform-vs-staggered
-*ratio* and the latency percentiles are the transferable signal.
-Results land in ``BENCH_serve.json``.
+Grid: {dense, w8a8_nibble} × {xla, pallas} × {uniform, staggered} ×
+{dense, paged} cache on a reduced config.  CPU wall-clock is a
+functional proxy (pallas runs in interpret mode — correctness, not
+speed); the uniform-vs-staggered *ratio*, the latency percentiles and
+the per-request cache HBM column are the transferable signal.  The
+``cache_kb_per_req`` column is the point of the paged cache: dense
+reserves the full ``max_len`` slab per request, paged reserves only the
+pages its live tokens need (requests here draw prompts from
+[budget/2, budget], so the paged figure sits measurably below the
+slab).  Results land in ``BENCH_serve.json``.
 
     PYTHONPATH=src python benchmarks/serve_bench.py [--json out.json]
 """
@@ -36,18 +41,25 @@ PROMPT_BUDGET = 16
 NEW_TOKENS = 16
 REQUESTS = 8
 STAGGER_S = 0.05
+PAGE_SIZE = 4
+# the slot budget is provisioned for a worst case twice the actual
+# workload (as a production deployment must be): dense reserves the
+# whole slab per request, paged reserves only live pages — the gap is
+# the cache_kb_per_req column
+MAX_LEN = 2 * (PROMPT_BUDGET + NEW_TOKENS)
 GRID = [("dense", "xla"), ("dense", "pallas"),
         ("w8a8_nibble", "xla"), ("w8a8_nibble", "pallas")]
 
-_HEADER = ("workload,quant,backend,requests,slots,tok_per_s,"
-           "req_p50_ms,req_p99_ms,ttft_p50_ms,compile_s")
+_HEADER = ("workload,quant,backend,cache,requests,slots,tok_per_s,"
+           "req_p50_ms,req_p99_ms,ttft_p50_ms,cache_kb_per_req,compile_s")
 
 
-def _bench_one(cfg, params, quant, backend, workload):
+def _bench_one(cfg, params, quant, backend, workload, cache_mode):
     from repro.serve import Engine, ServeConfig, run_timed_workload
-    scfg = ServeConfig(batch=SLOTS, max_len=PROMPT_BUDGET + NEW_TOKENS,
+    scfg = ServeConfig(batch=SLOTS, max_len=MAX_LEN,
                        prefill_len=PROMPT_BUDGET, decode_chunk=8,
-                       quant_mode=quant, quant_backend=backend)
+                       quant_mode=quant, quant_backend=backend,
+                       cache_mode=cache_mode, page_size=PAGE_SIZE)
     engine = Engine(cfg, params, scfg)
     stagger = STAGGER_S if workload == "staggered" else 0.0
     r = run_timed_workload(engine, cfg.vocab_size, requests=REQUESTS,
@@ -59,7 +71,8 @@ def _bench_one(cfg, params, quant, backend, workload):
                            "this jax version")
     if counts != {"prefill": 1, "decode_chunk": 1}:
         raise RuntimeError(f"engine recompiled during benchmark: {counts}")
-    return {"workload": workload, "quant": quant, "backend": backend, **r}
+    return {"workload": workload, "quant": quant, "backend": backend,
+            "cache": cache_mode, **r}
 
 
 def run(json_path: str | None = None):
@@ -72,12 +85,15 @@ def run(json_path: str | None = None):
     rows = []
     for quant, backend in GRID:
         for workload in ("uniform", "staggered"):
-            r = _bench_one(cfg, params, quant, backend, workload)
-            rows.append(r)
-            yield (f"{r['workload']},{r['quant']},{r['backend']},"
-                   f"{r['requests']},{r['slots']},{r['tok_per_s']},"
-                   f"{r['req_p50_ms']},{r['req_p99_ms']},"
-                   f"{r['ttft_p50_ms']},{r['compile_s']}")
+            for cache_mode in ("dense", "paged"):
+                r = _bench_one(cfg, params, quant, backend, workload,
+                               cache_mode)
+                rows.append(r)
+                yield (f"{r['workload']},{r['quant']},{r['backend']},"
+                       f"{r['cache']},{r['requests']},{r['slots']},"
+                       f"{r['tok_per_s']},{r['req_p50_ms']},"
+                       f"{r['req_p99_ms']},{r['ttft_p50_ms']},"
+                       f"{r['cache_kb_per_req']},{r['compile_s']}")
     if json_path:
         payload = {
             "note": "Continuous-batching engine throughput on the reduced "
@@ -86,7 +102,14 @@ def run(json_path: str | None = None):
                     "staggered = arrivals every "
                     f"{int(STAGGER_S * 1e3)}ms, exercising slot refill "
                     "via per-slot decode positions. Latencies are "
-                    "per-request (arrival to completion).",
+                    "per-request (arrival to completion). The slot "
+                    f"budget (max_len={MAX_LEN}) is provisioned for a "
+                    "worst case 2x the workload; cache=paged uses "
+                    f"page_size={PAGE_SIZE} pools + page-table "
+                    "indirection and cache_kb_per_req is the per-request "
+                    "KV reservation (dense: the max_len slab; paged: "
+                    "allocated pages only — the HBM win on requests "
+                    "shorter than the provisioned worst case).",
             "arch": ARCH,
             "results": rows,
         }

@@ -25,7 +25,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-__all__ = ["flash_attention_fwd_pallas", "flash_attention_bwd_pallas"]
+__all__ = ["flash_attention_fwd_pallas", "flash_attention_bwd_pallas",
+           "paged_decode_attention_pallas"]
 
 _NEG_INF = -1e30
 
@@ -122,6 +123,110 @@ def flash_attention_fwd_pallas(q, k, v, *, scale, causal=True, window=0,
         ],
         interpret=interpret,
     )(q, k, v)
+
+
+# ---------------------------------------------------------------------------
+# Paged decode: one query per slot against a page-table-indexed KV pool
+# ---------------------------------------------------------------------------
+
+def _paged_decode_kernel(table_ref, pos_ref, q_ref, k_ref, v_ref, o_ref,
+                         m_scr, l_scr, acc_scr, *, scale, window, softcap,
+                         page_size):
+    """Grid (B, KVH, max_pages), pages innermost.  The page id never
+    enters the kernel body: the K/V BlockSpec index maps read the
+    scalar-prefetched table (``table[b, j]``) to aim each block's DMA,
+    so the pool gather costs no HBM copy — the paper's
+    composition-through-indexing move on the decode data path."""
+    b = pl.program_id(0)
+    j = pl.program_id(2)
+
+    @pl.when(j == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, _NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[0, 0]                       # (G, d)
+    k = k_ref[0, :, 0, :]                 # (page_size, d)
+    v = v_ref[0, :, 0, :]                 # (page_size, dv)
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale
+    if softcap:
+        s = jnp.tanh(s / softcap) * softcap
+    q_pos = pos_ref[b]
+    k_pos = j * page_size + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+    m = k_pos <= q_pos                    # causal vs the one live query
+    if window:
+        m = m & (q_pos - k_pos < window)
+    s = jnp.where(m, s, _NEG_INF)
+
+    m_prev, l_prev = m_scr[...], l_scr[...]
+    m_new = jnp.maximum(m_prev, s.max(axis=-1, keepdims=True))
+    p = jnp.exp(s - m_new)
+    corr = jnp.exp(m_prev - m_new)
+    l_new = l_prev * corr + p.sum(axis=-1, keepdims=True)
+    acc_scr[...] = acc_scr[...] * corr + jax.lax.dot_general(
+        p.astype(v.dtype), v, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+    m_scr[...] = m_new
+    l_scr[...] = l_new
+
+    @pl.when(j == pl.num_programs(2) - 1)
+    def _finish():
+        o_ref[0, 0] = (acc_scr[...] / jnp.maximum(l_scr[...], 1e-30)) \
+            .astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("scale", "window", "softcap",
+                                             "interpret"))
+def paged_decode_attention_pallas(q, k_pool, v_pool, table, q_pos, *,
+                                  scale, window=0, softcap=0.0,
+                                  interpret=True):
+    """Single-token decode attention over a paged KV pool.
+
+    ``q``: (B, KVH, G, d) — grouped queries, one token per slot;
+    ``k_pool``/``v_pool``: (num_pages, page_size, KVH, d/dv);
+    ``table``: (B, max_pages) int32 page table; ``q_pos``: (B,) int32
+    per-slot query positions.  Returns (B, KVH, G, dv).
+
+    Pages past a slot's live length resolve to the trash page; their
+    rows are garbage but the position mask writes ``-inf`` before the
+    softmax, so they contribute exp(-inf)=0.  Production TPU lowering
+    wants d/dv lane-aligned (the ops wrapper pads) and a page_size that
+    is a multiple of the sublane tile; interpret mode takes any shape.
+    """
+    b, kvh, g, d = q.shape
+    num_pages, page_size, _, dv = v_pool.shape
+    max_pages = table.shape[1]
+
+    grid = (b, kvh, max_pages)
+    kernel = functools.partial(_paged_decode_kernel, scale=scale,
+                               window=window, softcap=softcap,
+                               page_size=page_size)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,            # table, q_pos
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, g, d), lambda b, h, j, tbl, pos: (b, h, 0, 0)),
+            pl.BlockSpec((1, page_size, 1, d),
+                         lambda b, h, j, tbl, pos: (tbl[b, j], 0, h, 0)),
+            pl.BlockSpec((1, page_size, 1, dv),
+                         lambda b, h, j, tbl, pos: (tbl[b, j], 0, h, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, g, dv),
+                               lambda b, h, j, tbl, pos: (b, h, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((g, 1), jnp.float32),
+            pltpu.VMEM((g, 1), jnp.float32),
+            pltpu.VMEM((g, dv), jnp.float32),
+        ],
+    )
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b, kvh, g, dv), q.dtype),
+        interpret=interpret,
+    )(table.astype(jnp.int32), q_pos.astype(jnp.int32), q, k_pool, v_pool)
 
 
 # ---------------------------------------------------------------------------

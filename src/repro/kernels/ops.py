@@ -24,7 +24,7 @@ from repro.kernels.nibble_matmul import fused_nibble_matmul_pallas
 from repro.kernels.quant_matmul_fused import quantize_rows
 
 __all__ = ["quant_matmul", "nibble_matmul", "nibble_matmul_w4", "lut_matmul",
-           "quant_matmul_fused", "flash_mha"]
+           "quant_matmul_fused", "flash_mha", "paged_flash_decode"]
 
 W_FORMATS = ("int8", "int4_packed", "lut")
 
@@ -262,3 +262,44 @@ def _flash_mha_bwd(scale, causal, window, softcap, group, interpret,
 
 
 flash_mha.defvjp(_flash_mha_fwd, _flash_mha_bwd)
+
+
+# ---------------------------------------------------------------------------
+# Paged decode attention (page-table-indexed KV pool)
+# ---------------------------------------------------------------------------
+
+def paged_flash_decode(q, k_pool, v_pool, table, q_pos, *, scale,
+                       window=0, softcap=0.0, interpret=None):
+    """Single-token decode attention against a paged KV cache.
+
+    ``q``: (B, 1, H, d) with heads ordered (kv_head, group);
+    ``k_pool``/``v_pool``: (num_pages, page_size, KVH, d/dv) shared
+    pools; ``table``: (B, max_pages) int32 page table; ``q_pos``: (B,)
+    per-slot query positions.  Returns (B, 1, H, dv).
+
+    The kernel walks the page table through scalar-prefetched BlockSpec
+    index maps — no gathered (B, max_len, ...) copy of the cache is
+    materialized, unlike the XLA reference path.  Head dims are padded
+    to the 128-lane grid here; page_size/group alignment is the
+    caller's concern on real TPUs (interpret mode takes any shape).
+    """
+    from repro.kernels.flash_attention import paged_decode_attention_pallas
+    if interpret is None:
+        interpret = not _on_tpu()
+    b, s, h, d = q.shape
+    if s != 1:
+        raise ValueError(f"paged decode takes one query per slot, got "
+                         f"S={s}")
+    kvh = k_pool.shape[2]
+    g = h // kvh
+    dv = v_pool.shape[-1]
+    qg = q.reshape(b, kvh, g, d)                  # (B, KVH, G, d)
+
+    def pad_last(x, mult=128):
+        p = (-x.shape[-1]) % mult
+        return jnp.pad(x, [(0, 0)] * (x.ndim - 1) + [(0, p)]) if p else x
+
+    o = paged_decode_attention_pallas(
+        pad_last(qg), pad_last(k_pool), pad_last(v_pool), table, q_pos,
+        scale=scale, window=window, softcap=softcap, interpret=interpret)
+    return o[..., :dv].reshape(b, 1, h, dv)

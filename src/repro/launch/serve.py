@@ -6,10 +6,12 @@ Batch mode (legacy lockstep generate):
         --batch 4 --prompt-len 32 --new-tokens 32 --quant w8a8_nibble
 
 Request-level workloads (continuous batching: per-slot positions, slot
-refill, per-request latency):
+refill, per-request latency), optionally over the paged KV cache and
+with a priority mix:
 
     PYTHONPATH=src python -m repro.launch.serve --arch qwen3-4b \
-        --workload staggered --requests 16 --stagger-ms 50
+        --workload staggered --requests 16 --stagger-ms 50 \
+        --cache-mode paged --page-size 8 --priority-mix 0.25
 
 Compile time is reported separately from steady-state throughput (a
 warmup pass triggers every compilation before the timed run).
@@ -30,12 +32,19 @@ from repro.serve import Engine, ServeConfig
 def _build(args):
     cfg = reduced(get_config(args.arch)).replace(quant_mode=args.quant)
     params = model_init(jax.random.PRNGKey(0), cfg)
+    max_len = args.prompt_len + args.new_tokens
+    if args.cache_mode == "paged":
+        # the paged pool is page-granular; round the budget up
+        max_len += (-max_len) % args.page_size
     scfg = ServeConfig(batch=args.batch,
-                       max_len=args.prompt_len + args.new_tokens,
+                       max_len=max_len,
                        prefill_len=args.prompt_len,
                        temperature=args.temperature,
                        decode_chunk=args.decode_chunk,
-                       quant_backend=args.quant_backend)
+                       priority_aging_s=args.priority_aging_s,
+                       quant_backend=args.quant_backend,
+                       cache_mode=args.cache_mode,
+                       page_size=args.page_size)
     return cfg, params, Engine(cfg, params, scfg)
 
 
@@ -74,10 +83,11 @@ def run_requests(args, cfg, engine):
     stagger = args.stagger_ms / 1000.0 if args.workload == "staggered" else 0.0
     r = run_timed_workload(engine, cfg.vocab_size, requests=args.requests,
                            prompt_budget=args.prompt_len,
-                           new_tokens=args.new_tokens, stagger_s=stagger)
+                           new_tokens=args.new_tokens, stagger_s=stagger,
+                           priority_mix=args.priority_mix)
     print(f"arch={cfg.name} quant={args.quant} backend={args.quant_backend} "
-          f"workload={args.workload} requests={args.requests} "
-          f"slots={args.batch}")
+          f"cache={args.cache_mode} workload={args.workload} "
+          f"requests={args.requests} slots={args.batch}")
     print(f"  compile+warmup: {r['compile_s']:.2f}s   "
           f"(compilations: {r['compile_counts']})")
     print(f"  steady-state:   {r['tokens']} tokens in {r['wall_s']:.2f}s "
@@ -85,6 +95,10 @@ def run_requests(args, cfg, engine):
     print(f"  request latency p50={r['req_p50_ms']:.0f}ms "
           f"p99={r['req_p99_ms']:.0f}ms   "
           f"ttft p50={r['ttft_p50_ms']:.0f}ms")
+    print(f"  cache HBM/request: {r['cache_kb_per_req']:.1f} KiB")
+    if "hi_req_p50_ms" in r:
+        print(f"  priority split:  hi p50={r['hi_req_p50_ms']:.0f}ms  "
+              f"lo p50={r['lo_req_p50_ms']:.0f}ms")
 
 
 def main(argv=None):
@@ -112,6 +126,18 @@ def main(argv=None):
                     choices=["xla", "pallas"],
                     help="pallas = fused single-pass kernels "
                          "(ops.quant_matmul, in-kernel dequant epilogue)")
+    ap.add_argument("--cache-mode", default="dense",
+                    choices=["dense", "paged"],
+                    help="paged = shared page pools + page-table "
+                         "indirection (cache HBM scales with live tokens)")
+    ap.add_argument("--page-size", type=int, default=8,
+                    help="tokens per KV page (paged cache mode)")
+    ap.add_argument("--priority-mix", type=float, default=0.0,
+                    help="fraction of workload requests submitted at "
+                         "priority 1 (rest 0); reports per-class latency")
+    ap.add_argument("--priority-aging-s", type=float, default=1.0,
+                    help="queue-wait seconds per +1 effective priority "
+                         "(anti-starvation aging; 0 = strict priorities)")
     args = ap.parse_args(argv)
 
     cfg, _, engine = _build(args)

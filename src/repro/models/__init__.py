@@ -5,7 +5,9 @@ from repro.models.transformer import (  # noqa: F401
     encode,
     forward,
     init_caches,
+    init_paged_caches,
     merge_slot_caches,
+    merge_slot_paged_caches,
     model_init,
     prefill,
 )

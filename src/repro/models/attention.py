@@ -20,7 +20,9 @@ from repro.core.linear import linear_apply, linear_init
 from repro.models.layers import apply_rope, rms_norm, rms_norm_init, rope
 
 __all__ = ["attn_init", "attn_apply", "mla_init", "mla_apply",
-           "init_kv_cache", "init_mla_cache", "scatter_cache_rows"]
+           "init_kv_cache", "init_mla_cache", "scatter_cache_rows",
+           "init_paged_kv_cache", "init_paged_mla_cache",
+           "scatter_paged_rows", "gather_pages"]
 
 _NEG_INF = -2.0 ** 30
 
@@ -67,6 +69,52 @@ def scatter_cache_rows(buf, new, index):
         return jax.lax.dynamic_update_slice(b, n, (i,) + (0,) * (b.ndim - 1))
 
     return jax.vmap(one)(buf, new, index)
+
+
+# ---------------------------------------------------------------------------
+# Paged KV cache: shared page pool + per-slot page-table indirection
+# ---------------------------------------------------------------------------
+#
+# Layout: each layer's cache leaf is a shared ``(num_pages, page_size,
+# ...)`` pool; a ``(B, max_pages)`` int32 page table (built by
+# ``serve.paging``) maps slot positions to pool pages.  Page ids are
+# data, not shape — one compilation serves every allocation pattern, so
+# slot refill and page recycling never recompile.
+
+def scatter_paged_rows(pool, new, table, index):
+    """Write one decode row per slot through the page table.
+
+    ``pool``: (num_pages, page_size, ...); ``new``: (B, 1, ...);
+    ``table``: (B, max_pages) int32; ``index``: scalar or (B,) position.
+    Row ``index[b]`` of slot ``b`` lands at pool position
+    ``(table[b, index[b] // page_size], index[b] % page_size)``.
+    Distinct live slots own distinct pages, so the scatter never
+    collides; idle slots' table rows all point at the trash page, where
+    their frozen idempotent rewrites are harmless.
+    """
+    if new.shape[1] != 1:
+        raise ValueError(f"paged scatter writes one row per slot, got "
+                         f"S={new.shape[1]}")
+    ps = pool.shape[1]
+    b = new.shape[0]
+    index = jnp.broadcast_to(jnp.asarray(index, jnp.int32).reshape(-1), (b,))
+    page = jnp.take_along_axis(table, (index // ps)[:, None], axis=1)[:, 0]
+    return pool.at[page, index % ps].set(new[:, 0].astype(pool.dtype))
+
+
+def gather_pages(pool, table):
+    """Reassemble per-slot contiguous caches from the page pool.
+
+    (num_pages, page_size, ...) gathered through (B, max_pages) →
+    (B, max_pages · page_size, ...): the XLA reference decode path —
+    after the gather the attention math is bit-identical to the dense
+    slab (rows beyond a slot's live length hold garbage from the trash
+    page or stale pages, exactly where the causal mask already writes
+    ``-inf``).
+    """
+    b, mp = table.shape
+    g = jnp.take(pool, table, axis=0)           # (B, MP, page_size, ...)
+    return g.reshape(b, mp * pool.shape[1], *pool.shape[2:])
 
 
 # ---------------------------------------------------------------------------
@@ -183,6 +231,20 @@ def init_kv_cache(cfg, batch: int, max_len: int, dtype=jnp.bfloat16) -> dict:
     return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
 
 
+def init_paged_kv_cache(cfg, num_pages: int, page_size: int,
+                        dtype=jnp.bfloat16) -> dict:
+    """Paged dual of :func:`init_kv_cache`: K/V live in a shared
+    ``(num_pages, page_size, ...)`` pool addressed through a page table
+    instead of a dense per-slot ``max_len`` slab."""
+    shape = (num_pages, page_size, cfg.n_kv_heads, cfg.head_dim)
+    if cfg.kv_cache_dtype == "int8":
+        return {"k": jnp.zeros(shape, jnp.int8),
+                "v": jnp.zeros(shape, jnp.int8),
+                "k_scale": jnp.zeros(shape[:3] + (1,), jnp.float32),
+                "v_scale": jnp.zeros(shape[:3] + (1,), jnp.float32)}
+    return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
+
+
 def _q8_heads(t):
     """Symmetric int8 per-(token, head): t (B,S,KVH,D) → (q, scale)."""
     amax = jnp.maximum(jnp.max(jnp.abs(t.astype(jnp.float32)), axis=-1,
@@ -196,7 +258,7 @@ def _q8_heads(t):
 def attn_apply(params, cfg, x, *, positions, kind: str = "full",
                cache: dict | None = None, cache_index=None,
                kv_source: jax.Array | None = None, causal: bool = True,
-               return_cache: bool = False):
+               return_cache: bool = False, page_table=None):
     """Returns (out, new_cache).  Modes:
 
     * train/prefill: ``cache=None`` → K/V from ``x`` (or ``kv_source``
@@ -206,6 +268,12 @@ def attn_apply(params, cfg, x, *, positions, kind: str = "full",
       the new token's K/V are scattered in and attention runs against
       the cache with per-slot causal masking (``positions`` carries each
       slot's query position).
+    * paged decode: additionally ``page_table`` (B, max_pages) int32 —
+      ``cache`` leaves are shared (num_pages, page_size, ...) pools; the
+      scatter routes through the table and attention either gathers
+      pages back into position order (XLA reference path, bit-identical
+      to the dense slab) or, under ``attn_impl="flash"``, runs the
+      Pallas paged-decode kernel that walks the table directly.
     """
     b, s, d = x.shape
     h, kvh, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
@@ -236,8 +304,48 @@ def attn_apply(params, cfg, x, *, positions, kind: str = "full",
         sin_k, cos_k = rope(k_pos_new, hd, theta)
         k = apply_rope(k, sin_k, cos_k).astype(x.dtype)
 
+    scale = cfg.attn_scale or (1.0 / hd ** 0.5)
+    window = cfg.sliding_window if kind == "local" else 0
+    is_causal_self = causal and kv_source is None
+
     new_cache = cache
-    if cache is not None:
+    paged_kernel = False
+    if cache is not None and page_table is not None:
+        # paged decode: scatter through the page table into the shared
+        # pool, then either gather pages back into position order (XLA
+        # reference — bit-identical to the dense slab) or let the Pallas
+        # flash-decode kernel walk the table (fast path, no gather copy)
+        quant_kv = "k_scale" in cache
+        if quant_kv:
+            kq, ks = _q8_heads(k)
+            vq, vs = _q8_heads(v)
+            writes = {"k": kq, "v": vq, "k_scale": ks, "v_scale": vs}
+        else:
+            writes = {"k": k, "v": v}
+        new_cache = {key: scatter_paged_rows(cache[key], val, page_table,
+                                             cache_index)
+                     for key, val in writes.items()}
+        paged_kernel = (cfg.attn_impl == "flash" and not quant_kv
+                        and is_causal_self and s == 1
+                        and not cfg.attn_core_bypass)
+        if paged_kernel:
+            k_full = v_full = None
+        elif quant_kv:
+            k_full = (gather_pages(new_cache["k"], page_table)
+                      .astype(jnp.float32)
+                      * gather_pages(new_cache["k_scale"], page_table)) \
+                .astype(x.dtype)
+            v_full = (gather_pages(new_cache["v"], page_table)
+                      .astype(jnp.float32)
+                      * gather_pages(new_cache["v_scale"], page_table)) \
+                .astype(x.dtype)
+        else:
+            k_full = gather_pages(new_cache["k"], page_table)
+            v_full = gather_pages(new_cache["v"], page_table)
+        sk_total = page_table.shape[1] * cache["k"].shape[1]
+        k_pos = jnp.broadcast_to(jnp.arange(sk_total)[None, :],
+                                 (b, sk_total))
+    elif cache is not None:
         # decode: scatter the new K/V at cache_index (scalar or per-slot
         # vector), attend to the cache
         quant_kv = "k_scale" in cache
@@ -278,11 +386,14 @@ def attn_apply(params, cfg, x, *, positions, kind: str = "full",
                 new_cache = {"k": k.astype(jnp.bfloat16),
                              "v": v.astype(jnp.bfloat16)}
 
-    scale = cfg.attn_scale or (1.0 / hd ** 0.5)
-    window = cfg.sliding_window if kind == "local" else 0
-    is_causal_self = causal and kv_source is None
     if cfg.attn_core_bypass:
         out = jnp.zeros((b, s, h, hd), x.dtype)
+    elif paged_kernel:
+        from repro.kernels.ops import paged_flash_decode
+        out = paged_flash_decode(q, new_cache["k"], new_cache["v"],
+                                 page_table, positions[:, -1], scale=scale,
+                                 window=window,
+                                 softcap=cfg.attn_logit_softcap)
     elif cfg.attn_impl == "flash" and cache is None and is_causal_self:
         out = _flash_self_attention(q, k, v, scale=scale, window=window,
                                     softcap=cfg.attn_logit_softcap)
@@ -380,8 +491,18 @@ def init_mla_cache(cfg, batch: int, max_len: int, dtype=jnp.bfloat16) -> dict:
     }
 
 
+def init_paged_mla_cache(cfg, num_pages: int, page_size: int,
+                         dtype=jnp.bfloat16) -> dict:
+    """Paged dual of :func:`init_mla_cache`: compressed latents + shared
+    rope key in page pools."""
+    return {
+        "c_kv": jnp.zeros((num_pages, page_size, cfg.kv_lora_rank), dtype),
+        "k_rope": jnp.zeros((num_pages, page_size, cfg.qk_rope_dim), dtype),
+    }
+
+
 def mla_apply(params, cfg, x, *, positions, cache=None, cache_index=None,
-              return_cache: bool = False):
+              return_cache: bool = False, page_table=None):
     b, s, d = x.shape
     h = cfg.n_heads
     d_nope, d_rope, d_v = cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim
@@ -408,7 +529,22 @@ def mla_apply(params, cfg, x, *, positions, cache=None, cache_index=None,
         .reshape(b, s, d_rope)
 
     new_cache = cache
-    if cache is not None:
+    if cache is not None and page_table is not None:
+        # paged decode: scatter the latent row through the page table,
+        # gather pages back for the shared decompression matmul (the
+        # latent is re-expanded per step anyway, so the XLA gather is
+        # the natural reference path for MLA)
+        new_cache = {
+            "c_kv": scatter_paged_rows(cache["c_kv"], c_kv, page_table,
+                                       cache_index),
+            "k_rope": scatter_paged_rows(cache["k_rope"], k_rope_new,
+                                         page_table, cache_index),
+        }
+        c_kv_f = gather_pages(new_cache["c_kv"], page_table)
+        k_rope_f = gather_pages(new_cache["k_rope"], page_table)
+        sk = c_kv_f.shape[1]
+        k_pos = jnp.broadcast_to(jnp.arange(sk)[None, :], (b, sk))
+    elif cache is not None:
         c_kv_f = scatter_cache_rows(cache["c_kv"], c_kv, cache_index)
         k_rope_f = scatter_cache_rows(cache["k_rope"], k_rope_new,
                                       cache_index)

@@ -28,6 +28,8 @@ from repro.models.attention import (
     attn_init,
     init_kv_cache,
     init_mla_cache,
+    init_paged_kv_cache,
+    init_paged_mla_cache,
     mla_apply,
     mla_init,
 )
@@ -49,7 +51,8 @@ from repro.models.mamba import (
 from repro.models.moe import moe_apply, moe_init
 
 __all__ = ["model_init", "forward", "prefill", "decode_step", "init_caches",
-           "encode", "unrolled_blocks"]
+           "init_paged_caches", "merge_slot_caches",
+           "merge_slot_paged_caches", "encode", "unrolled_blocks"]
 
 # When True, the block stack is a Python loop instead of lax.scan, so the
 # compiled HLO contains every layer body.  Used by the dry-run cost pass:
@@ -100,7 +103,7 @@ def _layer_init(key, cfg: ModelConfig, spec: LayerSpec, *,
 
 def _layer_apply(params, cfg: ModelConfig, spec: LayerSpec, x, *,
                  positions, cache=None, cache_index=None, enc_out=None,
-                 causal=True, mode="train"):
+                 causal=True, mode="train", page_table=None):
     """Returns (x, new_cache, aux_loss)."""
     aux = jnp.zeros((), jnp.float32)
     new_cache: dict = {}
@@ -112,13 +115,15 @@ def _layer_apply(params, cfg: ModelConfig, spec: LayerSpec, x, *,
             out, c = mla_apply(params["attn"], cfg, h, positions=positions,
                                cache=cache.get("attn"),
                                cache_index=cache_index,
-                               return_cache=(mode == "prefill"))
+                               return_cache=(mode == "prefill"),
+                               page_table=page_table)
         else:
             out, c = attn_apply(params["attn"], cfg, h, positions=positions,
                                 kind=spec.attn_kind,
                                 cache=cache.get("attn"),
                                 cache_index=cache_index, causal=causal,
-                                return_cache=(mode == "prefill"))
+                                return_cache=(mode == "prefill"),
+                                page_table=page_table)
         if c is not None:
             new_cache["attn"] = c
         x = x + out
@@ -185,7 +190,8 @@ def _stack_init(key, cfg: ModelConfig, *, cross: bool = False) -> dict:
 
 
 def _stack_apply(params, cfg: ModelConfig, x, *, positions, caches=None,
-                 cache_index=None, enc_out=None, causal=True, mode="train"):
+                 cache_index=None, enc_out=None, causal=True, mode="train",
+                 page_table=None):
     """Returns (x, new_caches, total_aux)."""
     total_aux = jnp.zeros((), jnp.float32)
     want_cache = mode in ("prefill", "decode")
@@ -200,7 +206,8 @@ def _stack_apply(params, cfg: ModelConfig, x, *, positions, caches=None,
         x = maybe_shard(x, "activation")   # pin (dp, ∅, ∅) between layers
         return _layer_apply(p, cfg, spec, x, positions=positions,
                             cache=cache, cache_index=cache_index,
-                            enc_out=enc_out, causal=causal, mode=mode)
+                            enc_out=enc_out, causal=causal, mode=mode,
+                            page_table=page_table)
 
     # prefix/suffix layers run OUTSIDE the scanned-and-checkpointed
     # blocks; without their own remat, all their attention internals
@@ -336,11 +343,59 @@ def forward(params, cfg: ModelConfig, tokens, *, extra_embeds=None,
 
 
 def init_caches(cfg: ModelConfig, batch: int, max_len: int) -> dict:
+    """Decode caches: dense per-slot slabs, or — when
+    ``cfg.cache_mode == "paged"`` — shared page pools (see
+    :func:`init_paged_caches`) addressed through a page table.  Mamba
+    recurrent state has no sequence axis and stays per-slot either way.
+    """
+    if cfg.cache_mode == "paged":
+        page_size = cfg.page_size
+        if page_size < 1:
+            raise ValueError(f"page_size must be >= 1, got {page_size}")
+        if max_len % page_size:
+            raise ValueError(f"max_len {max_len} must be a multiple of "
+                             f"page_size {page_size}")
+        # auto pool: capacity parity with the dense slab + trash page
+        num_pages = cfg.num_pages or batch * (max_len // page_size) + 1
+        return init_paged_caches(cfg, batch, num_pages, page_size)
+
     def layer_cache(spec: LayerSpec):
         if spec.mixer == "attn":
             if spec.attn_kind == "mla":
                 return {"attn": init_mla_cache(cfg, batch, max_len)}
             return {"attn": init_kv_cache(cfg, batch, max_len)}
+        if spec.mixer == "mamba":
+            return {"mamba": init_mamba_cache(cfg, batch)}
+        return {}
+
+    def stacked(spec: LayerSpec):
+        one = layer_cache(spec)
+        return jax.tree_util.tree_map(
+            lambda a: jnp.broadcast_to(a[None], (cfg.n_blocks, *a.shape))
+            .copy() if cfg.n_blocks else a, one)
+
+    return {
+        "prefix": [layer_cache(s) for s in cfg.prefix_pattern],
+        "blocks": {str(j): stacked(s)
+                   for j, s in enumerate(cfg.block_pattern)}
+        if cfg.n_blocks else None,
+        "suffix": [layer_cache(s) for s in cfg.suffix_pattern],
+    }
+
+
+def init_paged_caches(cfg: ModelConfig, batch: int, num_pages: int,
+                      page_size: int) -> dict:
+    """Paged dual of :func:`init_caches`: every attention/MLA leaf is a
+    shared ``(num_pages, page_size, ...)`` pool (one pool per layer; the
+    scanned blocks stack pools on their leading block axis exactly like
+    the dense slabs).  Capacity scales with *live* tokens: ``num_pages``
+    is a workload knob, not ``batch × max_len / page_size``."""
+    def layer_cache(spec: LayerSpec):
+        if spec.mixer == "attn":
+            if spec.attn_kind == "mla":
+                return {"attn": init_paged_mla_cache(cfg, num_pages,
+                                                     page_size)}
+            return {"attn": init_paged_kv_cache(cfg, num_pages, page_size)}
         if spec.mixer == "mamba":
             return {"mamba": init_mamba_cache(cfg, batch)}
         return {}
@@ -437,8 +492,46 @@ def merge_slot_caches(big, one, slot):
     return jax.tree_util.tree_map_with_path(put, big, one)
 
 
+def merge_slot_paged_caches(big, one, slot, pages):
+    """Paged dual of :func:`merge_slot_caches`: copy a prefilled
+    single-sequence cache into the shared page pools instead of a slab
+    row.  ``one``'s sequence leaves (length ``S``, a multiple of the
+    pool page size) are reshaped into ``S / page_size`` whole pages and
+    scattered to the page ids in ``pages`` (a ``(max_pages,)`` traced
+    vector — entries past the request's live pages point at the trash
+    page, so pad-token pages land somewhere harmless and one
+    compilation serves every prompt length).  Non-sequence leaves
+    (mamba conv/ssm state) scatter at batch slot ``slot`` exactly as in
+    the dense path."""
+    pages = jnp.asarray(pages, jnp.int32)
+
+    def put(path, b_leaf, s_leaf):
+        key = path[-1].key if hasattr(path[-1], "key") else None
+        blk = _is_block_leaf(path)
+        if key not in _SEQ_CACHE_KEYS:
+            b_ax = 1 if blk else 0
+            start = [0] * b_leaf.ndim
+            start[b_ax] = slot
+            return jax.lax.dynamic_update_slice(
+                b_leaf, s_leaf.astype(b_leaf.dtype), tuple(start))
+        ps = b_leaf.shape[2] if blk else b_leaf.shape[1]
+        s = s_leaf.shape[2] if blk else s_leaf.shape[1]
+        if s % ps:
+            raise ValueError(f"prefill cache length {s} is not a whole "
+                             f"number of pages (page_size {ps})")
+        n_p = s // ps
+        if blk:
+            nb = b_leaf.shape[0]
+            rows = s_leaf.reshape(nb, n_p, ps, *s_leaf.shape[3:])
+            return b_leaf.at[:, pages[:n_p]].set(rows.astype(b_leaf.dtype))
+        rows = s_leaf.reshape(n_p, ps, *s_leaf.shape[2:])
+        return b_leaf.at[pages[:n_p]].set(rows.astype(b_leaf.dtype))
+
+    return jax.tree_util.tree_map_with_path(put, big, one)
+
+
 def decode_step(params, cfg: ModelConfig, token, caches, index, *,
-                enc_out=None):
+                enc_out=None, page_table=None):
     """One decode step.  token: (B, 1) int32.
 
     ``index`` is the cache write position — a scalar (every sequence at
@@ -448,6 +541,12 @@ def decode_step(params, cfg: ModelConfig, token, caches, index, *,
     forms compile once and serve every position assignment.  Attention
     caches scatter per slot; mamba layers carry per-sequence recurrent
     state and never index by position, so their semantics are unchanged.
+
+    With ``page_table`` (a ``(B, max_pages)`` int32 table), ``caches``
+    are shared page pools: the scatter routes through the table
+    (``page = table[slot, pos // page_size]``) and attention gathers
+    pages back into position order — page ids are data, not shape, so
+    the same compilation serves every allocation pattern.
     """
     x = embed_apply(params["embed"], token,
                     scale_by_sqrt_dim=cfg.emb_scale_by_sqrt_dim)
@@ -456,5 +555,6 @@ def decode_step(params, cfg: ModelConfig, token, caches, index, *,
     pos = jnp.broadcast_to(index.reshape(-1, 1), (b, 1))
     x, new_caches, _ = _stack_apply(params["stack"], cfg, x, positions=pos,
                                     caches=caches, cache_index=index,
-                                    enc_out=enc_out, mode="decode")
+                                    enc_out=enc_out, mode="decode",
+                                    page_table=page_table)
     return _logits(params, cfg, x), new_caches

@@ -4,4 +4,9 @@ from repro.serve.engine import (  # noqa: F401
     ServeConfig,
     make_serve_step,
 )
+from repro.serve.paging import (  # noqa: F401
+    PageAllocator,
+    PageTable,
+    pages_needed,
+)
 from repro.serve.workload import run_timed_workload  # noqa: F401

@@ -9,11 +9,28 @@ program.  Concretely:
   position vector, so every slot decodes at its own offset — positions
   are data, not shape, and one compilation serves every mix of request
   lengths.
+* **Paged KV cache.**  With ``cache_mode="paged"`` the per-slot
+  ``max_len`` slab is replaced by shared ``(num_pages, page_size, ...)``
+  pools plus a ``(batch, max_pages)`` int32 page table — the paper's
+  fixed-width-reusable-unit idea applied to KV storage.  Page ids are
+  data, not shape, so allocation, refill and recycling never recompile;
+  a host-side free-list allocator (``serve.paging``) hands pages out at
+  admission and takes them back at completion, and admission *defers*
+  (backpressure) instead of OOMing when the pool is exhausted.  Cache
+  HBM then scales with live tokens, not ``batch × max_len``.
 * **Prefill into a free slot.**  A new request is prefilled alone
   (batch 1), padded to the slot prompt budget (``prefill_len``), and its
   caches are scattered into the free slot of the shared batched cache
-  (``merge_slot_caches``).  Pad-token cache rows are harmless: decode
-  overwrites row ``p`` before any query can attend to it.
+  (``merge_slot_caches``; the paged dual copies whole prompt *pages*
+  into the pools instead of padding a dense slab to ``max_len``).
+  Pad-token cache rows are harmless: decode overwrites row ``p`` before
+  any query can attend to it.
+* **Priority scheduling.**  The request queue is a priority heap
+  (``Request.priority``, higher first; arrival time then submission
+  order break ties) with simple aging — every ``priority_aging_s``
+  seconds of waiting adds one effective priority level, so long prompts
+  can no longer head-of-line-block short high-priority ones and starved
+  low-priority requests eventually win.
 * **Per-slot completion.**  Each slot tracks its own remaining-token
   budget and optional ``eos_id``; finished slots are refilled from the
   request queue between decode chunks without recompiling anything
@@ -24,11 +41,12 @@ program.  Concretely:
 * **Sampling.**  Every generated token, including the first one after
   prefill, goes through the same temperature/greedy path.
 
-Limits (tracked in ROADMAP "Open items"): the KV cache is a dense
-per-slot ``max_len`` slab (no paging), the queue is FIFO (no request
-priorities), and models with mamba mixers prefill at exact prompt length
-(end-padding would pollute the SSM state), which recompiles per distinct
-prompt length.
+Limits (tracked in ROADMAP "Open items"): models with mamba mixers
+prefill at exact prompt length (end-padding would pollute the SSM
+state), which recompiles per distinct prompt length; admitted requests
+are never preempted (priorities order the queue, they do not evict
+running slots); and paged mode allocates a request's worst-case page
+count at admission rather than growing page-by-page per decode chunk.
 
 ``make_serve_step`` remains the single-token jit-able step the decode
 dry-run cells lower.
@@ -37,6 +55,7 @@ dry-run cells lower.
 from __future__ import annotations
 
 import dataclasses
+import heapq
 import time
 from typing import Callable
 
@@ -49,8 +68,11 @@ from repro.models import (
     decode_step,
     init_caches,
     merge_slot_caches,
+    merge_slot_paged_caches,
     prefill,
 )
+from repro.models.transformer import _SEQ_CACHE_KEYS
+from repro.serve.paging import PageAllocator, PageTable, pages_needed
 
 __all__ = ["ServeConfig", "Request", "make_serve_step", "Engine"]
 
@@ -67,14 +89,23 @@ class ServeConfig:
     #   distinct length; always used for mamba-mixer models, where
     #   end-padding would corrupt the recurrent state).
     decode_chunk: int = 8             # tokens per jitted scan dispatch
-    # Serving-time quantization overrides: deploy any checkpoint under a
-    # different execution mode/backend than it was configured with (the
-    # params stay bf16; integer modes quantize on the fly).  ``None``
-    # keeps the model config's setting.  ``quant_backend="pallas"``
-    # routes every projection through ``ops.quant_matmul`` — the
-    # single-pass plane-fused kernel with the in-kernel dequant epilogue.
+    priority_aging_s: float = 0.0     # seconds of queue wait per +1
+    #   effective priority level (0 = aging off, strict priorities)
+    # Serving-time overrides: deploy any checkpoint under a different
+    # execution mode/backend/cache layout than it was configured with
+    # (the params stay bf16; integer modes quantize on the fly).
+    # ``None`` keeps the model config's setting.
+    # ``quant_backend="pallas"`` routes every projection through
+    # ``ops.quant_matmul`` — the single-pass plane-fused kernel with the
+    # in-kernel dequant epilogue.  ``cache_mode="paged"`` switches the
+    # KV cache to page pools + page-table indirection; ``page_size`` /
+    # ``num_pages`` size the pool (num_pages=0 → capacity parity with
+    # the dense slab).
     quant_mode: str | None = None
     quant_backend: str | None = None
+    cache_mode: str | None = None
+    page_size: int | None = None
+    num_pages: int | None = None
 
 
 @dataclasses.dataclass
@@ -84,22 +115,88 @@ class Request:
     prompt: np.ndarray                # (S,) int32
     max_new_tokens: int
     arrival: float = 0.0              # seconds after Engine.run() starts
+    priority: int = 0                 # higher = served first (with aging)
     tokens: list = dataclasses.field(default_factory=list)  # generated
     t_first: float = -1.0             # time to first token (from run t0)
     t_done: float = -1.0
+    cache_rows: int = 0               # cache rows reserved for this
+    #   request: max_len in dense mode, pages × page_size in paged mode
+    #   (the per-request HBM footprint the benchmark reports)
 
     @property
     def text_len(self) -> int:
         return len(self.prompt) + len(self.tokens)
 
 
-def _apply_quant_overrides(cfg: ModelConfig, scfg: ServeConfig) -> ModelConfig:
+class _PriorityQueue:
+    """Arrival-gated max-priority queue with lazy aging.
+
+    Backed by a heap keyed ``(-priority, arrival, seq)``; ``pop`` takes
+    the current time so not-yet-arrived requests are invisible and
+    waiting requests age: every ``aging_s`` seconds in the queue adds
+    one effective priority level (aging off when 0).  The common case —
+    every queued request arrived, aging off — pops straight off the
+    heap; otherwise the effective keys are recomputed over the (small)
+    queue."""
+
+    def __init__(self, aging_s: float = 0.0):
+        self.aging_s = aging_s
+        self._heap: list[tuple] = []
+        self._seq = 0
+
+    def __len__(self) -> int:
+        return len(self._heap)
+
+    def push(self, req: Request) -> None:
+        heapq.heappush(self._heap, (-req.priority, req.arrival, self._seq,
+                                    req))
+        self._seq += 1
+
+    def _effective(self, req: Request, now: float) -> int:
+        if self.aging_s <= 0:
+            return req.priority
+        return req.priority + int(max(0.0, now - req.arrival)
+                                  / self.aging_s)
+
+    def next_arrival(self) -> float | None:
+        return min((e[1] for e in self._heap), default=None)
+
+    def pop(self, now: float, admit: Callable[[Request], bool] = None):
+        """Remove and return the best arrived request, or ``None``.
+        ``admit`` vetoes the winner without removing it (admission
+        backpressure defers strictly in priority order)."""
+        if not self._heap:
+            return None
+        best_i = None
+        if self.aging_s <= 0 and self._heap[0][1] <= now:
+            best_i = 0                # heap order is the effective order
+        else:
+            best_key = None
+            for i, (_, arr, seq, req) in enumerate(self._heap):
+                if arr > now:
+                    continue
+                key = (-self._effective(req, now), arr, seq)
+                if best_key is None or key < best_key:
+                    best_i, best_key = i, key
+            if best_i is None:
+                return None
+        req = self._heap[best_i][3]
+        if admit is not None and not admit(req):
+            return None
+        self._heap[best_i] = self._heap[-1]
+        self._heap.pop()
+        heapq.heapify(self._heap)
+        return req
+
+
+def _apply_overrides(cfg: ModelConfig, scfg: ServeConfig) -> ModelConfig:
     updates = {}
-    if scfg.quant_mode is not None:
-        updates["quant_mode"] = scfg.quant_mode
-    if scfg.quant_backend is not None:
-        updates["quant_backend"] = scfg.quant_backend
-    return dataclasses.replace(cfg, **updates) if updates else cfg
+    for field in ("quant_mode", "quant_backend", "cache_mode", "page_size",
+                  "num_pages"):
+        val = getattr(scfg, field)
+        if val is not None:
+            updates[field] = val
+    return cfg.replace(**updates) if updates else cfg
 
 
 def _sampler(scfg: ServeConfig) -> Callable:
@@ -120,9 +217,15 @@ def make_serve_step(cfg: ModelConfig, scfg: ServeConfig) -> Callable:
 
     ``index`` is a traced scalar *or* ``(B,)`` per-slot position vector —
     one compilation serves every decode position assignment.  Greedy or
-    temperature sampling on-device.
+    temperature sampling on-device.  Dense caches only: the paged layout
+    needs a page table threaded per step, which this single-token
+    dry-run entry point does not carry — use ``Engine`` for paged mode.
     """
-    cfg = _apply_quant_overrides(cfg, scfg)
+    cfg = _apply_overrides(cfg, scfg)
+    if cfg.cache_mode == "paged":
+        raise ValueError("make_serve_step does not support "
+                         "cache_mode='paged' (no page-table plumbing); "
+                         "use Engine for the paged cache")
     sample = _sampler(scfg)
 
     def serve_step(params, caches, token, index, rng):
@@ -134,8 +237,9 @@ def make_serve_step(cfg: ModelConfig, scfg: ServeConfig) -> Callable:
 
 
 class Engine:
-    """Continuous-batching engine: request queue + slot refill + chunked
-    jitted decode.  See the module docstring for the execution model."""
+    """Continuous-batching engine: priority request queue + slot refill +
+    chunked jitted decode, over a dense or paged KV cache.  See the
+    module docstring for the execution model."""
 
     def __init__(self, cfg: ModelConfig, params, scfg: ServeConfig):
         if scfg.prefill_len > scfg.max_len:
@@ -144,15 +248,34 @@ class Engine:
         if scfg.decode_chunk < 1:
             raise ValueError(f"decode_chunk must be >= 1, got "
                              f"{scfg.decode_chunk}")
-        self.cfg = _apply_quant_overrides(cfg, scfg)
+        self.cfg = _apply_overrides(cfg, scfg)
         self.params = params
         self.scfg = scfg
         specs = (*cfg.prefix_pattern, *cfg.block_pattern,
                  *cfg.suffix_pattern)
         self._has_mamba = any(s.mixer == "mamba" for s in specs)
-        # the cache slab is donated: both stages rebind it from the
+        self._paged = self.cfg.cache_mode == "paged"
+        if self._paged:
+            ps = self.cfg.page_size
+            if ps < 1:
+                raise ValueError(f"page_size must be >= 1, got {ps}")
+            if scfg.max_len % ps:
+                raise ValueError(f"max_len {scfg.max_len} must be a "
+                                 f"multiple of page_size {ps}")
+            self._page_size = ps
+            self._max_pages = scfg.max_len // ps
+            self._num_pages = (self.cfg.num_pages
+                               or scfg.batch * self._max_pages + 1)
+            # page 0 is the trash page: idle slots' table rows point at
+            # it so their frozen idempotent cache writes never corrupt a
+            # recycled page
+            self.cfg = self.cfg.replace(num_pages=self._num_pages)
+        elif self.cfg.cache_mode != "dense":
+            raise ValueError(f"cache_mode must be 'dense' or 'paged', "
+                             f"got {self.cfg.cache_mode!r}")
+        # the cache slab/pool is donated: both stages rebind it from the
         # return value, so the update happens in place instead of
-        # copying every unmodified row of (batch × max_len × layers)
+        # copying every unmodified row
         self._prefill_fn = jax.jit(self._build_prefill(), donate_argnums=1)
         self._chunk_fn = jax.jit(self._build_decode_chunk(),
                                  donate_argnums=1)
@@ -164,16 +287,34 @@ class Engine:
     # compiled stages
     # ------------------------------------------------------------------
 
+    def _prefill_pad_len(self, pad_len: int) -> int:
+        """Cache length the prefill stage grows to: the prompt budget,
+        rounded up to whole pages in paged mode (the page merge copies
+        whole pages; rows past the real prompt are pad garbage that
+        decode overwrites or the causal mask hides)."""
+        if not self._paged:
+            return self.scfg.max_len
+        ps = self._page_size
+        return -(-pad_len // ps) * ps
+
     def _build_prefill(self):
         cfg, scfg = self.cfg, self.scfg
         sample = _sampler(scfg)
+        paged = self._paged
 
-        def prefill_into_slot(params, caches, prompt, prompt_len, slot, rng):
-            """prompt: (1, P) — padded; prompt_len/slot: traced scalars."""
+        def prefill_into_slot(params, caches, prompt, prompt_len, slot,
+                              pages, rng):
+            """prompt: (1, P) — padded; prompt_len/slot: traced scalars;
+            pages: (max_pages,) traced page-id row (trash-filled past the
+            request's live pages; ignored in dense mode)."""
+            grow_to = self._prefill_pad_len(prompt.shape[1])
             logits, one, _ = prefill(params, cfg, prompt,
-                                     max_len=scfg.max_len,
+                                     max_len=grow_to,
                                      logits_index=prompt_len - 1)
-            caches = merge_slot_caches(caches, one, slot)
+            if paged:
+                caches = merge_slot_paged_caches(caches, one, slot, pages)
+            else:
+                caches = merge_slot_caches(caches, one, slot)
             first = sample(logits[:, -1], rng)[0]
             return caches, first
 
@@ -183,16 +324,22 @@ class Engine:
         cfg, scfg = self.cfg, self.scfg
         sample = _sampler(scfg)
         max_pos = scfg.max_len - 1
+        paged = self._paged
 
-        def chunk(params, caches, token, positions, active, remaining, rng):
+        def chunk(params, caches, token, positions, active, remaining,
+                  table, rng):
             """Scan ``decode_chunk`` tokens; inactive slots are frozen
-            (their rewrites of already-written cache rows are idempotent)
-            and emit -1."""
+            (their rewrites land on already-written rows — or, paged, on
+            the trash page) and emit -1.  ``table`` is the (B, max_pages)
+            page table (all-trash dummy in dense mode)."""
+            page_table = table if paged else None
+
             def body(carry, _):
                 caches, token, positions, active, remaining, rng = carry
                 rng, sub = jax.random.split(rng)
                 logits, caches = decode_step(params, cfg, token, caches,
-                                             positions)
+                                             positions,
+                                             page_table=page_table)
                 nxt = sample(logits[:, -1], sub)
                 emitted = jnp.where(active, nxt, -1)
                 remaining = remaining - active.astype(jnp.int32)
@@ -221,22 +368,32 @@ class Engine:
     def reset(self, rng=None) -> None:
         """Clear queue/slots (compiled functions and cache buffers are
         kept — stale cache rows are invisible: decode overwrites row
-        ``p`` before any query can attend to it)."""
+        ``p`` before any query can attend to it, and recycled pages are
+        re-filled by their next owner's prefill)."""
         b = self.scfg.batch
         self._rng = rng if rng is not None else jax.random.PRNGKey(0)
-        self._queue: list[Request] = []
+        self._queue = _PriorityQueue(self.scfg.priority_aging_s)
         self._slots: list[Request | None] = [None] * b
         self._token = np.zeros((b, 1), np.int32)
         self._positions = np.zeros((b,), np.int32)
         self._active = np.zeros((b,), bool)
         self._remaining = np.zeros((b,), np.int32)
         self._finished: dict[int, Request] = {}
+        if self._paged:
+            self.allocator = PageAllocator(self._num_pages, reserved=1)
+            self.page_table = PageTable(b, self._max_pages, trash_page=0)
+            self._slot_pages: list[list[int] | None] = [None] * b
+        else:
+            # dense mode ships an all-zero dummy table so the chunk
+            # signature (and its single compilation) is layout-invariant
+            self.page_table = PageTable(b, 1, trash_page=0)
 
     @property
     def compile_counts(self) -> dict:
         """Compilations per stage — the refill-without-recompile claim
         is checkable: counts stay at 1 across arbitrary request mixes
-        (given a fixed ``prefill_len`` slot budget)."""
+        and page recyclings (given a fixed ``prefill_len`` slot
+        budget)."""
         def count(fn):
             # _cache_size is jax-private; report -1 rather than crash
             # the engine if an upgrade moves it
@@ -245,10 +402,34 @@ class Engine:
         return {"prefill": count(self._prefill_fn),
                 "decode_chunk": count(self._chunk_fn)}
 
-    def submit(self, prompt, max_new_tokens: int, arrival: float = 0.0) -> int:
+    @property
+    def cache_token_bytes(self) -> int:
+        """KV-cache bytes per cached token, summed over every layer's
+        sequence-axis leaves (scales and block stacking included) —
+        multiply by a request's ``cache_rows`` for its HBM footprint."""
+        rows = (self._num_pages * self._page_size if self._paged
+                else self.scfg.batch * self.scfg.max_len)
+        total = 0
+        for path, leaf in jax.tree_util.tree_flatten_with_path(
+                self._caches)[0]:
+            key = path[-1].key if hasattr(path[-1], "key") else None
+            if key in _SEQ_CACHE_KEYS:
+                total += leaf.size * leaf.dtype.itemsize
+        return total // rows
+
+    def _pages_for(self, req: Request) -> int:
+        """Worst-case page count for a request: prompt rows plus one row
+        per decode step except the last token (which is sampled but
+        never written back)."""
+        rows = len(req.prompt) + req.max_new_tokens - 1
+        return pages_needed(rows, self._page_size)
+
+    def submit(self, prompt, max_new_tokens: int, arrival: float = 0.0,
+               priority: int = 0) -> int:
         """Queue one request; returns its id.  ``arrival`` (seconds from
         ``run()`` start) models staggered workloads — the request is not
-        admitted to a slot before its arrival time."""
+        admitted to a slot before its arrival time.  ``priority`` orders
+        admission (higher first; see ``ServeConfig.priority_aging_s``)."""
         prompt = np.asarray(prompt, np.int32).reshape(-1)
         scfg = self.scfg
         if max_new_tokens < 1:
@@ -263,42 +444,64 @@ class Engine:
                              f"slot budget prefill_len={scfg.prefill_len}")
         max_new_tokens = min(max_new_tokens, scfg.max_len - prompt.size)
         req = Request(id=self._next_id, prompt=prompt,
-                      max_new_tokens=max_new_tokens, arrival=arrival)
+                      max_new_tokens=max_new_tokens, arrival=arrival,
+                      priority=priority)
+        if self._paged and self._pages_for(req) > self.allocator.capacity:
+            raise ValueError(
+                f"request needs {self._pages_for(req)} pages but the pool "
+                f"capacity is {self.allocator.capacity}; raise num_pages "
+                f"or shorten the request")
         self._next_id += 1
-        self._queue.append(req)
-        self._queue.sort(key=lambda r: r.arrival)
+        self._queue.push(req)
         return req.id
 
     # ------------------------------------------------------------------
     # scheduling loop
     # ------------------------------------------------------------------
 
+    def _can_admit(self, req: Request) -> bool:
+        """Admission backpressure: in paged mode the pool must cover the
+        request's worst-case pages (freed pages un-defer it later)."""
+        return (not self._paged
+                or self.allocator.can_alloc(self._pages_for(req)))
+
     def _admit(self, now: float) -> None:
-        """Prefill arrived requests into free slots (FIFO)."""
+        """Prefill arrived requests into free slots, best priority
+        first."""
         for slot in range(self.scfg.batch):
-            if self._slots[slot] is not None or not self._queue:
+            if self._slots[slot] is not None:
                 continue
-            if self._queue[0].arrival > now:
+            req = self._queue.pop(now, admit=self._can_admit)
+            if req is None:
                 break
-            req = self._queue.pop(0)
             p_len = int(req.prompt.size)
             if self._has_mamba or not self.scfg.prefill_len:
                 pad_len = p_len          # exact-length prefill
             else:
                 pad_len = self.scfg.prefill_len
+            if self._paged:
+                # tokens stay at pad_len (page-rounding them would feed
+                # extra pad tokens through mamba mixers); the prefill
+                # stage zero-grows the cache to whole pages instead
+                pages = self.allocator.alloc(self._pages_for(req))
+                self.page_table.assign(slot, pages)
+                self._slot_pages[slot] = pages
+                req.cache_rows = len(pages) * self._page_size
+            else:
+                req.cache_rows = self.scfg.max_len
             padded = np.zeros((1, pad_len), np.int32)
             padded[0, :p_len] = req.prompt
             self._rng, sub = jax.random.split(self._rng)
             self._caches, first = self._prefill_fn(
                 self.params, self._caches, jnp.asarray(padded), p_len,
-                slot, sub)
+                slot, jnp.asarray(self.page_table.row(slot)), sub)
             tok = int(first)
             req.tokens.append(tok)
             req.t_first = time.perf_counter() - self._t0
             done = (req.max_new_tokens <= 1
                     or (self.scfg.eos_id >= 0 and tok == self.scfg.eos_id))
             if done:
-                self._finish(req)
+                self._finish(req, slot)
             else:
                 self._slots[slot] = req
                 self._token[slot, 0] = tok
@@ -306,16 +509,26 @@ class Engine:
                 self._active[slot] = True
                 self._remaining[slot] = req.max_new_tokens - 1
 
-    def _finish(self, req: Request) -> None:
+    def _finish(self, req: Request, slot: int | None) -> None:
         req.t_done = time.perf_counter() - self._t0
         self._finished[req.id] = req
+        if self._paged and slot is not None \
+                and self._slot_pages[slot] is not None:
+            # recycle: the freed pages may be handed to the very next
+            # admission; the departing slot's table row is re-pointed at
+            # the trash page so its frozen idempotent decode writes
+            # cannot touch the new owner
+            self.allocator.free(self._slot_pages[slot])
+            self._slot_pages[slot] = None
+            self.page_table.clear(slot)
 
     def _run_chunk(self) -> None:
         (self._caches, token, positions, active, remaining, self._rng,
          toks, valid) = self._chunk_fn(
             self.params, self._caches, jnp.asarray(self._token),
             jnp.asarray(self._positions), jnp.asarray(self._active),
-            jnp.asarray(self._remaining), self._rng)
+            jnp.asarray(self._remaining),
+            jnp.asarray(self.page_table.asarray()), self._rng)
         self._token = np.array(token)        # copies: host state is mutable
         self._positions = np.array(positions)
         self._active = np.array(active)
@@ -332,7 +545,7 @@ class Engine:
                 if (len(req.tokens) >= req.max_new_tokens
                         or (self.scfg.eos_id >= 0
                             and tok == self.scfg.eos_id)):
-                    self._finish(req)
+                    self._finish(req, slot)
                     self._slots[slot] = None
                     break
 
@@ -341,15 +554,19 @@ class Engine:
         submitted request has finished.  Returns {id: Request} with
         per-request timing (t_first / t_done relative to run start)."""
         self._t0 = time.perf_counter()
-        while self._queue or any(r is not None for r in self._slots):
+        while len(self._queue) or any(r is not None for r in self._slots):
             now = time.perf_counter() - self._t0
             self._admit(now)
             if not self._active.any():
-                if self._queue:   # idle until the next arrival
-                    wait = self._queue[0].arrival \
-                        - (time.perf_counter() - self._t0)
+                if len(self._queue):   # idle until the next arrival
+                    nxt = self._queue.next_arrival()
+                    wait = nxt - (time.perf_counter() - self._t0)
                     if wait > 0:
                         time.sleep(min(wait, 0.05))
+                    # wait <= 0 means backpressure with an empty batch —
+                    # impossible (submit caps requests at pool capacity,
+                    # and an empty batch means every page is free), so
+                    # looping back to _admit always makes progress
                     continue
                 break
             self._run_chunk()

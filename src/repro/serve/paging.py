@@ -1,0 +1,134 @@
+"""Paged KV cache bookkeeping: a host-side block allocator + page table.
+
+The paper replaces one monolithic wide multiplier with fixed-width
+nibble units composed through cheap indexing; the serving analogue
+replaces the dense per-slot ``max_len`` KV slab with fixed-size *pages*
+composed through a page table.  The storage unit is small, uniform and
+reused, so cache capacity scales with *live* tokens instead of the
+worst-case request shape.
+
+Device-side layout (built in ``models.attention`` / ``models.transformer``):
+
+* every attention layer's K/V (or MLA latent) lives in a shared
+  ``(num_pages, page_size, ...)`` pool;
+* one ``(batch, max_pages)`` int32 page table maps each decode slot's
+  logical positions to pool pages: row ``pos`` of slot ``b`` lives at
+  ``(table[b, pos // page_size], pos % page_size)``.
+
+Page ids are **data, not shape** — one compiled program serves every
+allocation pattern, so slot refill and page recycling never recompile.
+
+This module is the *host* side: a free-list allocator with admission
+backpressure (``alloc`` returns ``None`` instead of OOMing) and the
+mutable table mirror the engine ships to the device each decode chunk.
+Page 0 is reserved as the **trash page**: idle slots' table rows point
+at it, so their frozen idempotent cache writes land somewhere harmless
+instead of corrupting a recycled page.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+__all__ = ["PageAllocator", "PageTable", "pages_needed"]
+
+
+def pages_needed(rows: int, page_size: int) -> int:
+    """Pages required to hold ``rows`` cache rows."""
+    if rows <= 0:
+        return 0
+    return -(-rows // page_size)
+
+
+class PageAllocator:
+    """LIFO free-list over a fixed pool of ``num_pages`` pages.
+
+    The first ``reserved`` page ids are never handed out (the engine
+    uses page 0 as the trash page).  ``alloc`` is all-or-nothing and
+    returns ``None`` when the pool cannot satisfy the request — the
+    caller defers admission (backpressure) instead of overcommitting.
+    Double-free and foreign-page frees raise: a page leak in the engine
+    is a correctness bug (recycled pages carry live KV rows), so the
+    allocator is strict enough for tests to assert ``in_use == 0``.
+    """
+
+    def __init__(self, num_pages: int, reserved: int = 1):
+        if num_pages <= reserved:
+            raise ValueError(f"num_pages {num_pages} must exceed the "
+                             f"{reserved} reserved page(s)")
+        self.num_pages = num_pages
+        self.reserved = reserved
+        # LIFO: freshly freed pages are reused first (their rows are the
+        # most likely to still be resident in any cache hierarchy)
+        self._free: list[int] = list(range(num_pages - 1, reserved - 1, -1))
+        self._live: set[int] = set()
+
+    @property
+    def capacity(self) -> int:
+        """Allocatable pages (pool minus reserved)."""
+        return self.num_pages - self.reserved
+
+    @property
+    def available(self) -> int:
+        return len(self._free)
+
+    @property
+    def in_use(self) -> int:
+        return len(self._live)
+
+    def can_alloc(self, n: int) -> bool:
+        return n <= len(self._free)
+
+    def alloc(self, n: int) -> list[int] | None:
+        """Pop ``n`` pages, or ``None`` (backpressure) if unavailable."""
+        if n < 0:
+            raise ValueError(f"cannot allocate {n} pages")
+        if n > len(self._free):
+            return None
+        pages = [self._free.pop() for _ in range(n)]
+        self._live.update(pages)
+        return pages
+
+    def free(self, pages) -> None:
+        """Return pages to the pool.  Raises on double-free or on a page
+        the allocator never handed out."""
+        pages = list(pages)
+        bad = [p for p in pages if p not in self._live]
+        if bad:
+            raise ValueError(f"freeing pages not currently allocated: {bad}")
+        for p in pages:
+            self._live.remove(p)
+            self._free.append(p)
+
+
+class PageTable:
+    """Mutable host mirror of the ``(batch, max_pages)`` device table.
+
+    Every entry defaults to ``trash_page``; ``assign`` fills a slot's
+    row prefix with its allocated pages (positions past the prefix —
+    and every position of an idle slot — resolve to the trash page,
+    where stale idempotent decode writes are harmless).
+    """
+
+    def __init__(self, batch: int, max_pages: int, trash_page: int = 0):
+        self.batch = batch
+        self.max_pages = max_pages
+        self.trash_page = trash_page
+        self.table = np.full((batch, max_pages), trash_page, np.int32)
+
+    def assign(self, slot: int, pages) -> None:
+        pages = np.asarray(pages, np.int32)
+        if pages.size > self.max_pages:
+            raise ValueError(f"{pages.size} pages exceed the per-slot "
+                             f"maximum of {self.max_pages}")
+        self.table[slot] = self.trash_page
+        self.table[slot, :pages.size] = pages
+
+    def clear(self, slot: int) -> None:
+        self.table[slot] = self.trash_page
+
+    def row(self, slot: int) -> np.ndarray:
+        return self.table[slot].copy()
+
+    def asarray(self) -> np.ndarray:
+        return self.table

@@ -10,7 +10,14 @@ definitions cannot drift apart:
 * request latency = arrival → completion; ttft = arrival → first token;
 * ``tok_per_s`` counts generated tokens over the timed ``run()`` wall
   clock (for staggered workloads that includes arrival gaps — the
-  continuous-batching question is how much refill recovers of them).
+  continuous-batching question is how much refill recovers of them);
+* ``cache_kb_per_req`` is the mean per-request KV-cache reservation
+  (dense: the full ``max_len`` slab; paged: allocated pages ×
+  page_size) times the engine's per-token cache bytes — the HBM-
+  footprint axis the paged cache exists to shrink;
+* ``priority_mix`` marks that fraction of requests priority 1 (rest 0)
+  and splits the latency percentiles per class, so the priority
+  scheduler's effect is visible in one run.
 """
 
 from __future__ import annotations
@@ -24,13 +31,29 @@ __all__ = ["run_timed_workload"]
 
 def run_timed_workload(engine, vocab_size: int, *, requests: int,
                        prompt_budget: int, new_tokens: int,
-                       stagger_s: float = 0.0, seed: int = 0) -> dict:
+                       stagger_s: float = 0.0, seed: int = 0,
+                       priority_mix: float = 0.0) -> dict:
     """Submit ``requests`` random prompts (lengths in
     [prompt_budget/2, prompt_budget], arrivals spaced ``stagger_s``
     apart), drain the engine, and return throughput/latency stats."""
+    # validate up front: requests == 0 crashes the percentile math below
+    # and prompt_budget < 2 turns the rng.integers bounds inside out
+    # (low = max(2, budget // 2) would exceed high = budget + 1)
+    if requests < 1:
+        raise ValueError(f"requests must be >= 1, got {requests}")
+    if prompt_budget < 2:
+        raise ValueError(f"prompt_budget must be >= 2 (prompt lengths are "
+                         f"drawn from [max(2, prompt_budget // 2), "
+                         f"prompt_budget]), got {prompt_budget}")
+    if new_tokens < 1:
+        raise ValueError(f"new_tokens must be >= 1, got {new_tokens}")
+    if not 0.0 <= priority_mix <= 1.0:
+        raise ValueError(f"priority_mix must be in [0, 1], got "
+                         f"{priority_mix}")
     rng = np.random.default_rng(seed)
     lens = rng.integers(max(2, prompt_budget // 2), prompt_budget + 1,
                         requests)
+    prios = (rng.random(requests) < priority_mix).astype(np.int32)
 
     # warmup: trigger every compilation outside the timed window
     engine.submit(rng.integers(0, vocab_size, int(lens[0])), 2)
@@ -40,7 +63,7 @@ def run_timed_workload(engine, vocab_size: int, *, requests: int,
     engine.reset()
 
     ids = [engine.submit(rng.integers(0, vocab_size, int(n)), new_tokens,
-                         arrival=i * stagger_s)
+                         arrival=i * stagger_s, priority=int(prios[i]))
            for i, n in enumerate(lens)]
     t0 = time.perf_counter()
     done = engine.run()
@@ -49,7 +72,8 @@ def run_timed_workload(engine, vocab_size: int, *, requests: int,
     toks = sum(len(done[i].tokens) for i in ids)
     lat = np.asarray([done[i].t_done - done[i].arrival for i in ids])
     ttft = np.asarray([done[i].t_first - done[i].arrival for i in ids])
-    return {
+    cache_rows = np.asarray([done[i].cache_rows for i in ids])
+    out = {
         "requests": requests,
         "slots": engine.scfg.batch,
         "prompt_budget": prompt_budget,
@@ -60,6 +84,14 @@ def run_timed_workload(engine, vocab_size: int, *, requests: int,
         "req_p50_ms": round(float(np.percentile(lat, 50)) * 1e3, 1),
         "req_p99_ms": round(float(np.percentile(lat, 99)) * 1e3, 1),
         "ttft_p50_ms": round(float(np.percentile(ttft, 50)) * 1e3, 1),
+        "cache_kb_per_req": round(float(cache_rows.mean())
+                                  * engine.cache_token_bytes / 1024.0, 1),
         "compile_s": round(compile_s, 2),
         "compile_counts": engine.compile_counts,
     }
+    if priority_mix > 0.0 and prios.any() and not prios.all():
+        for cls, name in ((1, "hi"), (0, "lo")):
+            sel = lat[prios == cls]
+            out[f"{name}_req_p50_ms"] = round(
+                float(np.percentile(sel, 50)) * 1e3, 1)
+    return out
