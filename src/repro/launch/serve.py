@@ -13,6 +13,14 @@ with a priority mix:
         --workload staggered --requests 16 --stagger-ms 50 \
         --cache-mode paged --page-size 8 --priority-mix 0.25
 
+Overcommitted pool (incremental page allocation + evict-and-resume
+preemption: pages are booked per live token, `--num-pages` may sit
+below the sum of worst-case page counts):
+
+    PYTHONPATH=src python -m repro.launch.serve --arch qwen3-4b \
+        --workload uniform --requests 16 --cache-mode paged \
+        --page-size 8 --alloc-mode incremental --num-pages 24
+
 Compile time is reported separately from steady-state throughput (a
 warmup pass triggers every compilation before the timed run).
 """
@@ -42,9 +50,11 @@ def _build(args):
                        temperature=args.temperature,
                        decode_chunk=args.decode_chunk,
                        priority_aging_s=args.priority_aging_s,
+                       alloc_mode=args.alloc_mode,
                        quant_backend=args.quant_backend,
                        cache_mode=args.cache_mode,
-                       page_size=args.page_size)
+                       page_size=args.page_size,
+                       num_pages=args.num_pages or None)
     return cfg, params, Engine(cfg, params, scfg)
 
 
@@ -96,6 +106,13 @@ def run_requests(args, cfg, engine):
           f"p99={r['req_p99_ms']:.0f}ms   "
           f"ttft p50={r['ttft_p50_ms']:.0f}ms")
     print(f"  cache HBM/request: {r['cache_kb_per_req']:.1f} KiB")
+    if args.cache_mode == "paged":
+        print(f"  pool: {r['pool_pages']} pages, mean occupancy "
+              f"{r['occupancy']:.0%}, mean concurrency "
+              f"{r['concurrency']:.2f}, preemptions {r['preemptions']}")
+    if r["truncated"]:
+        print(f"  WARNING: {r['truncated']} request(s) truncated at the "
+              f"max_len budget")
     if "hi_req_p50_ms" in r:
         print(f"  priority split:  hi p50={r['hi_req_p50_ms']:.0f}ms  "
               f"lo p50={r['lo_req_p50_ms']:.0f}ms")
@@ -132,6 +149,16 @@ def main(argv=None):
                          "indirection (cache HBM scales with live tokens)")
     ap.add_argument("--page-size", type=int, default=8,
                     help="tokens per KV page (paged cache mode)")
+    ap.add_argument("--alloc-mode", default="reserve",
+                    choices=["reserve", "incremental"],
+                    help="reserve = book worst-case pages at admission; "
+                         "incremental = book live-token pages per decode "
+                         "chunk with evict-and-resume preemption "
+                         "(allows an overcommitted --num-pages)")
+    ap.add_argument("--num-pages", type=int, default=0,
+                    help="KV pool size in pages (0 = parity with the "
+                         "dense slab); set below the worst-case sum to "
+                         "overcommit with --alloc-mode incremental")
     ap.add_argument("--priority-mix", type=float, default=0.0,
                     help="fraction of workload requests submitted at "
                          "priority 1 (rest 0); reports per-class latency")

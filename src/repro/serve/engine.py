@@ -18,6 +18,24 @@ program.  Concretely:
   admission and takes them back at completion, and admission *defers*
   (backpressure) instead of OOMing when the pool is exhausted.  Cache
   HBM then scales with live tokens, not ``batch × max_len``.
+* **Incremental page allocation.**  ``alloc_mode="reserve"`` books a
+  request's worst-case page count up front; ``alloc_mode="incremental"``
+  books only the prompt pages (plus the first decode page) and tops a
+  slot up right before any decode chunk whose writes would cross its
+  allocated page boundary (``PageTable.extend`` — still data, not
+  shape).  Early-EOS requests never touch their unbooked tail, so the
+  same pool sustains more concurrent requests (overcommit: ``num_pages``
+  may sit below the sum of worst-case page counts).
+* **Preemption.**  When an incremental top-up finds the pool dry, or a
+  strictly-higher-effective-priority arrival cannot get a slot or
+  pages, the weakest running slot is evicted: its pages return to the
+  pool and the request re-enters the queue *carrying its generated
+  tokens*.  On re-admission the prompt is re-prefilled (same compiled
+  prefill) and the generated tokens are teacher-forced back through the
+  decode chunk — the client-visible stream is preserved verbatim and a
+  preempted greedy stream resumes **bit-identically** to an
+  uninterrupted one.  Eviction uses the same aging-adjusted effective
+  priority as admission, so equal-priority requests never ping-pong.
 * **Prefill into a free slot.**  A new request is prefilled alone
   (batch 1), padded to the slot prompt budget (``prefill_len``), and its
   caches are scattered into the free slot of the shared batched cache
@@ -34,7 +52,8 @@ program.  Concretely:
 * **Per-slot completion.**  Each slot tracks its own remaining-token
   budget and optional ``eos_id``; finished slots are refilled from the
   request queue between decode chunks without recompiling anything
-  (``Engine.compile_counts`` stays at one entry per function).
+  (``Engine.compile_counts`` stays at one entry per function — counted
+  by an engine-owned signature tracker, not a jax-private probe).
 * **Jitted multi-token decode.**  The inner loop is a ``lax.scan`` over
   ``decode_chunk`` tokens inside a single ``jax.jit`` — one dispatch
   per chunk, not per token.
@@ -43,10 +62,14 @@ program.  Concretely:
 
 Limits (tracked in ROADMAP "Open items"): models with mamba mixers
 prefill at exact prompt length (end-padding would pollute the SSM
-state), which recompiles per distinct prompt length; admitted requests
-are never preempted (priorities order the queue, they do not evict
-running slots); and paged mode allocates a request's worst-case page
-count at admission rather than growing page-by-page per decode chunk.
+state), which recompiles per distinct prompt length; resume-after-
+preemption replays the generated tokens through the decode chunk, so a
+preempted request re-pays its generated length in decode steps (a
+page-level swap-out would avoid that) and *temperature* streams resume
+with a fresh rng path (token history is preserved, later draws are
+not bit-stable — greedy streams are); and prompts longer than one
+chunk still prefill in a single dispatch (no chunked prefill), so a
+very long prompt can stall running slots for one prefill's latency.
 
 ``make_serve_step`` remains the single-token jit-able step the decode
 dry-run cells lower.
@@ -89,8 +112,18 @@ class ServeConfig:
     #   distinct length; always used for mamba-mixer models, where
     #   end-padding would corrupt the recurrent state).
     decode_chunk: int = 8             # tokens per jitted scan dispatch
-    priority_aging_s: float = 0.0     # seconds of queue wait per +1
-    #   effective priority level (0 = aging off, strict priorities)
+    priority_aging_s: float = 0.0     # seconds since arrival per +1
+    #   effective priority level (0 = aging off, strict priorities).
+    #   Applied to queued AND running requests alike: the same measure
+    #   gates preemption, so a long-waiting request climbs toward
+    #   admission and, once admitted, becomes correspondingly harder to
+    #   evict — equal-priority requests can never evict each other.
+    alloc_mode: str = "reserve"       # paged-mode page accounting:
+    #   "reserve" books every request's worst-case page count at
+    #   admission; "incremental" books only the prompt pages (plus the
+    #   first decode page) and tops slots up per decode chunk,
+    #   preempting the weakest runner when the pool runs dry — the same
+    #   pool then sustains more concurrent requests (overcommit).
     # Serving-time overrides: deploy any checkpoint under a different
     # execution mode/backend/cache layout than it was configured with
     # (the params stay bf16; integer modes quantize on the fly).
@@ -119,9 +152,14 @@ class Request:
     tokens: list = dataclasses.field(default_factory=list)  # generated
     t_first: float = -1.0             # time to first token (from run t0)
     t_done: float = -1.0
-    cache_rows: int = 0               # cache rows reserved for this
+    cache_rows: int = 0               # peak cache rows reserved for this
     #   request: max_len in dense mode, pages × page_size in paged mode
     #   (the per-request HBM footprint the benchmark reports)
+    truncated: bool = False           # max_new_tokens was cut to fit the
+    #   max_len budget at submit (explicit, so short output is never
+    #   misread as an early EOS)
+    preemptions: int = 0              # times this request was evicted
+    #   mid-stream and later resumed
 
     @property
     def text_len(self) -> int:
@@ -152,7 +190,12 @@ class _PriorityQueue:
                                     req))
         self._seq += 1
 
-    def _effective(self, req: Request, now: float) -> int:
+    def effective(self, req: Request, now: float) -> int:
+        """Aging-adjusted priority.  The engine applies the same measure
+        to *running* requests when picking preemption victims, so two
+        equal-priority requests can never evict each other back and
+        forth (both age at the same rate; strict inequality gates every
+        eviction)."""
         if self.aging_s <= 0:
             return req.priority
         return req.priority + int(max(0.0, now - req.arrival)
@@ -161,25 +204,33 @@ class _PriorityQueue:
     def next_arrival(self) -> float | None:
         return min((e[1] for e in self._heap), default=None)
 
+    def _best_index(self, now: float) -> int | None:
+        if not self._heap:
+            return None
+        if self.aging_s <= 0 and self._heap[0][1] <= now:
+            return 0                  # heap order is the effective order
+        best_i, best_key = None, None
+        for i, (_, arr, seq, req) in enumerate(self._heap):
+            if arr > now:
+                continue
+            key = (-self.effective(req, now), arr, seq)
+            if best_key is None or key < best_key:
+                best_i, best_key = i, key
+        return best_i
+
+    def peek(self, now: float) -> Request | None:
+        """Best arrived request without removing it (the engine checks
+        whether it is worth preempting a running slot for)."""
+        i = self._best_index(now)
+        return None if i is None else self._heap[i][3]
+
     def pop(self, now: float, admit: Callable[[Request], bool] = None):
         """Remove and return the best arrived request, or ``None``.
         ``admit`` vetoes the winner without removing it (admission
         backpressure defers strictly in priority order)."""
-        if not self._heap:
+        best_i = self._best_index(now)
+        if best_i is None:
             return None
-        best_i = None
-        if self.aging_s <= 0 and self._heap[0][1] <= now:
-            best_i = 0                # heap order is the effective order
-        else:
-            best_key = None
-            for i, (_, arr, seq, req) in enumerate(self._heap):
-                if arr > now:
-                    continue
-                key = (-self._effective(req, now), arr, seq)
-                if best_key is None or key < best_key:
-                    best_i, best_key = i, key
-            if best_i is None:
-                return None
         req = self._heap[best_i][3]
         if admit is not None and not admit(req):
             return None
@@ -187,6 +238,37 @@ class _PriorityQueue:
         self._heap.pop()
         heapq.heapify(self._heap)
         return req
+
+
+class _CountingJit:
+    """Engine-owned compile counter around ``jax.jit``.
+
+    ``jax.jit`` compiles once per abstract call signature — the pytree
+    structure plus every leaf's shape/dtype/weak-type.  The wrapper
+    derives that key per call and counts distinct keys, which makes the
+    refill-without-recompile invariant checkable without the jax-private
+    ``_cache_size`` probe (whose absence used to crash the serving
+    benchmark on any jax upgrade that moved it)."""
+
+    def __init__(self, fn, **jit_kwargs):
+        self._fn = jax.jit(fn, **jit_kwargs)
+        self._keys: set = set()
+
+    @staticmethod
+    def _leaf_sig(leaf):
+        if hasattr(leaf, "shape") and hasattr(leaf, "dtype"):
+            return (tuple(leaf.shape), str(leaf.dtype),
+                    bool(getattr(leaf, "weak_type", False)))
+        return (type(leaf).__name__,)
+
+    def __call__(self, *args):
+        leaves, treedef = jax.tree_util.tree_flatten(args)
+        self._keys.add((treedef, tuple(map(self._leaf_sig, leaves))))
+        return self._fn(*args)
+
+    @property
+    def compile_count(self) -> int:
+        return len(self._keys)
 
 
 def _apply_overrides(cfg: ModelConfig, scfg: ServeConfig) -> ModelConfig:
@@ -238,8 +320,9 @@ def make_serve_step(cfg: ModelConfig, scfg: ServeConfig) -> Callable:
 
 class Engine:
     """Continuous-batching engine: priority request queue + slot refill +
-    chunked jitted decode, over a dense or paged KV cache.  See the
-    module docstring for the execution model."""
+    chunked jitted decode, over a dense or paged KV cache, with
+    incremental page allocation and evict-and-resume preemption in
+    paged mode.  See the module docstring for the execution model."""
 
     def __init__(self, cfg: ModelConfig, params, scfg: ServeConfig):
         if scfg.prefill_len > scfg.max_len:
@@ -248,6 +331,9 @@ class Engine:
         if scfg.decode_chunk < 1:
             raise ValueError(f"decode_chunk must be >= 1, got "
                              f"{scfg.decode_chunk}")
+        if scfg.alloc_mode not in ("reserve", "incremental"):
+            raise ValueError(f"alloc_mode must be 'reserve' or "
+                             f"'incremental', got {scfg.alloc_mode!r}")
         self.cfg = _apply_overrides(cfg, scfg)
         self.params = params
         self.scfg = scfg
@@ -255,6 +341,11 @@ class Engine:
                  *cfg.suffix_pattern)
         self._has_mamba = any(s.mixer == "mamba" for s in specs)
         self._paged = self.cfg.cache_mode == "paged"
+        self._incremental = scfg.alloc_mode == "incremental"
+        if self._incremental and not self._paged:
+            raise ValueError("alloc_mode='incremental' requires "
+                             "cache_mode='paged' (the dense slab has no "
+                             "pages to grow)")
         if self._paged:
             ps = self.cfg.page_size
             if ps < 1:
@@ -276,9 +367,10 @@ class Engine:
         # the cache slab/pool is donated: both stages rebind it from the
         # return value, so the update happens in place instead of
         # copying every unmodified row
-        self._prefill_fn = jax.jit(self._build_prefill(), donate_argnums=1)
-        self._chunk_fn = jax.jit(self._build_decode_chunk(),
-                                 donate_argnums=1)
+        self._prefill_fn = _CountingJit(self._build_prefill(),
+                                        donate_argnums=1)
+        self._chunk_fn = _CountingJit(self._build_decode_chunk(),
+                                      donate_argnums=1)
         self._caches = init_caches(self.cfg, scfg.batch, scfg.max_len)
         self._next_id = 0
         self.reset()
@@ -327,20 +419,26 @@ class Engine:
         paged = self._paged
 
         def chunk(params, caches, token, positions, active, remaining,
-                  table, rng):
+                  table, forced, forced_on, rng):
             """Scan ``decode_chunk`` tokens; inactive slots are frozen
             (their rewrites land on already-written rows — or, paged, on
             the trash page) and emit -1.  ``table`` is the (B, max_pages)
-            page table (all-trash dummy in dense mode)."""
+            page table (all-trash dummy in dense mode).  ``forced`` /
+            ``forced_on`` are (decode_chunk, B) teacher-forcing lanes:
+            where ``forced_on`` a preempted request's stored token
+            replaces the sampled one, replaying its stream verbatim so
+            the rebuilt KV matches an uninterrupted run's."""
             page_table = table if paged else None
 
-            def body(carry, _):
+            def body(carry, xs):
+                f_tok, f_on = xs
                 caches, token, positions, active, remaining, rng = carry
                 rng, sub = jax.random.split(rng)
                 logits, caches = decode_step(params, cfg, token, caches,
                                              positions,
                                              page_table=page_table)
                 nxt = sample(logits[:, -1], sub)
+                nxt = jnp.where(f_on, f_tok, nxt)
                 emitted = jnp.where(active, nxt, -1)
                 remaining = remaining - active.astype(jnp.int32)
                 alive = remaining > 0
@@ -356,7 +454,7 @@ class Engine:
 
             init = (caches, token, positions, active, remaining, rng)
             carry, (toks, valid) = jax.lax.scan(
-                body, init, None, length=scfg.decode_chunk)
+                body, init, (forced, forced_on), length=scfg.decode_chunk)
             return carry + (toks, valid)
 
         return chunk
@@ -379,9 +477,18 @@ class Engine:
         self._active = np.zeros((b,), bool)
         self._remaining = np.zeros((b,), np.int32)
         self._finished: dict[int, Request] = {}
+        # teacher-forcing lanes for resumed requests: tokens generated
+        # before a preemption, waiting to be replayed through the chunk
+        self._slot_forced: list[list[int]] = [[] for _ in range(b)]
+        self.preemptions = 0
+        self._stat_samples = 0
+        self._stat_running = 0
+        self._stat_in_use = 0
         if self._paged:
             self.allocator = PageAllocator(self._num_pages, reserved=1)
-            self.page_table = PageTable(b, self._max_pages, trash_page=0)
+            self.page_table = PageTable(b, self._max_pages, trash_page=0,
+                                        num_pages=self._num_pages,
+                                        reserved=1)
             self._slot_pages: list[list[int] | None] = [None] * b
         else:
             # dense mode ships an all-zero dummy table so the chunk
@@ -391,16 +498,28 @@ class Engine:
     @property
     def compile_counts(self) -> dict:
         """Compilations per stage — the refill-without-recompile claim
-        is checkable: counts stay at 1 across arbitrary request mixes
-        and page recyclings (given a fixed ``prefill_len`` slot
-        budget)."""
-        def count(fn):
-            # _cache_size is jax-private; report -1 rather than crash
-            # the engine if an upgrade moves it
-            return getattr(fn, "_cache_size", lambda: -1)()
+        is checkable: counts stay at 1 across arbitrary request mixes,
+        page recyclings and preemptions (given a fixed ``prefill_len``
+        slot budget).  Counted engine-side from distinct abstract call
+        signatures (see ``_CountingJit``) — no jax-private probe."""
+        return {"prefill": self._prefill_fn.compile_count,
+                "decode_chunk": self._chunk_fn.compile_count}
 
-        return {"prefill": count(self._prefill_fn),
-                "decode_chunk": count(self._chunk_fn)}
+    @property
+    def stats(self) -> dict:
+        """Scheduling counters for the run since the last ``reset``:
+        ``preemptions`` (evict-and-resume events), ``occupancy`` (mean
+        fraction of allocatable pool pages in use, sampled at each
+        decode chunk; 0 in dense mode), ``concurrency`` (mean admitted
+        requests per chunk) and ``pool_pages`` (device pool size)."""
+        n = max(1, self._stat_samples)
+        occ = (self._stat_in_use / (n * self.allocator.capacity)
+               if self._paged else 0.0)
+        return {"preemptions": self.preemptions,
+                "occupancy": occ,
+                "concurrency": self._stat_running / n,
+                "pool_pages": self.allocator.num_pages if self._paged
+                else 0}
 
     @property
     def cache_token_bytes(self) -> int:
@@ -424,12 +543,29 @@ class Engine:
         rows = len(req.prompt) + req.max_new_tokens - 1
         return pages_needed(rows, self._page_size)
 
+    def _alloc_pages_for(self, req: Request) -> int:
+        """Pages booked at admission: the worst case in reserve mode;
+        the prompt pages plus the first decode page in incremental mode
+        (later pages arrive via per-chunk top-up — resumed requests
+        regrow the same way while their tokens replay)."""
+        if not self._incremental:
+            return self._pages_for(req)
+        rows = len(req.prompt)
+        if req.max_new_tokens > 1:
+            rows += 1                 # first decode write lands at row p_len
+        return pages_needed(rows, self._page_size)
+
     def submit(self, prompt, max_new_tokens: int, arrival: float = 0.0,
                priority: int = 0) -> int:
         """Queue one request; returns its id.  ``arrival`` (seconds from
         ``run()`` start) models staggered workloads — the request is not
         admitted to a slot before its arrival time.  ``priority`` orders
-        admission (higher first; see ``ServeConfig.priority_aging_s``)."""
+        admission (higher first; see ``ServeConfig.priority_aging_s``)
+        and preemption (a strictly-higher-priority arrival may evict a
+        running slot).  A ``max_new_tokens`` that cannot fit the
+        ``max_len`` budget is clamped and flagged on the returned
+        request (``Request.truncated``) — explicit, never mistaken for
+        an early EOS."""
         prompt = np.asarray(prompt, np.int32).reshape(-1)
         scfg = self.scfg
         if max_new_tokens < 1:
@@ -442,10 +578,12 @@ class Engine:
                 and not self._has_mamba:
             raise ValueError(f"prompt length {prompt.size} exceeds the "
                              f"slot budget prefill_len={scfg.prefill_len}")
-        max_new_tokens = min(max_new_tokens, scfg.max_len - prompt.size)
+        budget = scfg.max_len - prompt.size
+        truncated = max_new_tokens > budget
         req = Request(id=self._next_id, prompt=prompt,
-                      max_new_tokens=max_new_tokens, arrival=arrival,
-                      priority=priority)
+                      max_new_tokens=min(max_new_tokens, budget),
+                      arrival=arrival, priority=priority,
+                      truncated=truncated)
         if self._paged and self._pages_for(req) > self.allocator.capacity:
             raise ValueError(
                 f"request needs {self._pages_for(req)} pages but the pool "
@@ -461,74 +599,224 @@ class Engine:
 
     def _can_admit(self, req: Request) -> bool:
         """Admission backpressure: in paged mode the pool must cover the
-        request's worst-case pages (freed pages un-defer it later)."""
+        request's booked pages (freed pages un-defer it later)."""
         return (not self._paged
-                or self.allocator.can_alloc(self._pages_for(req)))
+                or self.allocator.can_alloc(self._alloc_pages_for(req)))
+
+    def _pick_victim(self, now: float, below: int | None = None
+                     ) -> int | None:
+        """Slot of the weakest running request — lowest aging-adjusted
+        effective priority, ties broken by evicting the youngest.  With
+        ``below``, only slots *strictly* weaker qualify (admission-time
+        preemption must not thrash equal-priority requests)."""
+        best, best_key = None, None
+        for slot, req in enumerate(self._slots):
+            if req is None:
+                continue
+            eff = self._queue.effective(req, now)
+            if below is not None and eff >= below:
+                continue
+            key = (eff, -req.arrival, -req.id)
+            if best_key is None or key < best_key:
+                best, best_key = slot, key
+        return best
+
+    def _evict(self, slot: int, now: float) -> None:
+        """Preempt a running slot: return its pages to the pool and
+        requeue the request carrying every token generated so far (the
+        replay lane restores them on re-admission)."""
+        req = self._slots[slot]
+        if self._slot_forced[slot]:
+            # evicted mid-replay: splice the unreplayed tail back so the
+            # requeued request carries the full generated stream
+            req.tokens.extend(self._slot_forced[slot])
+            self._slot_forced[slot] = []
+        if self._paged and self._slot_pages[slot] is not None:
+            self.allocator.free(self._slot_pages[slot])
+            self._slot_pages[slot] = None
+            self.page_table.clear(slot)
+        self._slots[slot] = None
+        self._active[slot] = False
+        req.preemptions += 1
+        self.preemptions += 1
+        self._queue.push(req)
+
+    def _evictable_pages(self, now: float, cutoff: int) -> int:
+        """Pages the pool could recover by evicting every runner whose
+        effective priority sits strictly below ``cutoff`` — the
+        feasibility bound both preemption paths check before evicting
+        anyone, so no runner is ever sacrificed for an arrival that
+        still could not fit afterwards."""
+        return self.allocator.available + sum(
+            len(self._slot_pages[s] or ())
+            for s, r in enumerate(self._slots)
+            if r is not None and self._queue.effective(r, now) < cutoff)
 
     def _admit(self, now: float) -> None:
-        """Prefill arrived requests into free slots, best priority
-        first."""
-        for slot in range(self.scfg.batch):
-            if self._slots[slot] is not None:
+        """Admit arrived requests into free slots, best effective
+        priority first; a strictly-higher-priority arrival blocked on a
+        slot or on pages preempts the weakest runner(s)."""
+        while True:
+            free = next((s for s in range(self.scfg.batch)
+                         if self._slots[s] is None), None)
+            cand = self._queue.peek(now)
+            if cand is None:
+                return
+            cutoff = self._queue.effective(cand, now)
+            if free is None:
+                # all slots busy: evict for the slot only if the
+                # arrival's pages are also coverable, else the victim
+                # would lose its slot to an inadmissible head-of-queue
+                if self._paged and (self._evictable_pages(now, cutoff)
+                                    < self._alloc_pages_for(cand)):
+                    return
+                victim = self._pick_victim(now, below=cutoff)
+                if victim is None:
+                    return
+                self._evict(victim, now)
                 continue
             req = self._queue.pop(now, admit=self._can_admit)
             if req is None:
-                break
-            p_len = int(req.prompt.size)
-            if self._has_mamba or not self.scfg.prefill_len:
-                pad_len = p_len          # exact-length prefill
-            else:
-                pad_len = self.scfg.prefill_len
-            if self._paged:
-                # tokens stay at pad_len (page-rounding them would feed
-                # extra pad tokens through mamba mixers); the prefill
-                # stage zero-grows the cache to whole pages instead
-                pages = self.allocator.alloc(self._pages_for(req))
-                self.page_table.assign(slot, pages)
-                self._slot_pages[slot] = pages
-                req.cache_rows = len(pages) * self._page_size
-            else:
-                req.cache_rows = self.scfg.max_len
-            padded = np.zeros((1, pad_len), np.int32)
-            padded[0, :p_len] = req.prompt
-            self._rng, sub = jax.random.split(self._rng)
-            self._caches, first = self._prefill_fn(
-                self.params, self._caches, jnp.asarray(padded), p_len,
-                slot, jnp.asarray(self.page_table.row(slot)), sub)
+                # arrived but backpressured on pages: evict strictly
+                # weaker runners until the pool covers it, else defer
+                # (same feasibility bound before any eviction)
+                if (self._evictable_pages(now, cutoff)
+                        < self._alloc_pages_for(cand)):
+                    return
+                while not self._can_admit(cand):
+                    victim = self._pick_victim(now, below=cutoff)
+                    if victim is None:
+                        return
+                    self._evict(victim, now)
+                req = self._queue.pop(now, admit=self._can_admit)
+                if req is None:
+                    return
+            self._place(free, req, now)
+
+    def _place(self, slot: int, req: Request, now: float) -> None:
+        """Prefill a request into a free slot.  Fresh requests sample
+        their first token from the prefill logits; resumed requests
+        (non-empty ``tokens``) reuse their stored first token and queue
+        the rest on the slot's teacher-forcing lane, so the rebuilt KV
+        — and, for greedy decode, every later token — bit-matches an
+        uninterrupted run."""
+        p_len = int(req.prompt.size)
+        resumed = bool(req.tokens)
+        if self._has_mamba or not self.scfg.prefill_len:
+            pad_len = p_len              # exact-length prefill
+        else:
+            pad_len = self.scfg.prefill_len
+        if self._paged:
+            # tokens stay at pad_len (page-rounding them would feed
+            # extra pad tokens through mamba mixers); the prefill
+            # stage zero-grows the cache to whole pages instead
+            pages = self.allocator.alloc(self._alloc_pages_for(req))
+            self.page_table.assign(slot, pages)
+            self._slot_pages[slot] = pages
+            req.cache_rows = max(req.cache_rows,
+                                 len(pages) * self._page_size)
+        else:
+            req.cache_rows = self.scfg.max_len
+        padded = np.zeros((1, pad_len), np.int32)
+        padded[0, :p_len] = req.prompt
+        self._rng, sub = jax.random.split(self._rng)
+        self._caches, first = self._prefill_fn(
+            self.params, self._caches, jnp.asarray(padded), p_len,
+            slot, jnp.asarray(self.page_table.row(slot)), sub)
+        if resumed:
+            tok = req.tokens[0]
+            self._slot_forced[slot] = req.tokens[1:]
+            req.tokens = [tok]
+        else:
+            self._slot_forced[slot] = []
             tok = int(first)
             req.tokens.append(tok)
             req.t_first = time.perf_counter() - self._t0
-            done = (req.max_new_tokens <= 1
-                    or (self.scfg.eos_id >= 0 and tok == self.scfg.eos_id))
-            if done:
-                self._finish(req, slot)
-            else:
-                self._slots[slot] = req
-                self._token[slot, 0] = tok
-                self._positions[slot] = p_len
-                self._active[slot] = True
-                self._remaining[slot] = req.max_new_tokens - 1
+        done = (req.max_new_tokens <= 1
+                or (self.scfg.eos_id >= 0 and tok == self.scfg.eos_id))
+        if done:
+            self._finish(req, slot)
+        else:
+            self._slots[slot] = req
+            self._token[slot, 0] = tok
+            self._positions[slot] = p_len
+            self._active[slot] = True
+            self._remaining[slot] = req.max_new_tokens - 1
 
     def _finish(self, req: Request, slot: int | None) -> None:
         req.t_done = time.perf_counter() - self._t0
         self._finished[req.id] = req
+        if slot is not None:
+            self._slot_forced[slot] = []
         if self._paged and slot is not None \
                 and self._slot_pages[slot] is not None:
             # recycle: the freed pages may be handed to the very next
             # admission; the departing slot's table row is re-pointed at
             # the trash page so its frozen idempotent decode writes
-            # cannot touch the new owner
+            # cannot touch the new owner.  In incremental mode an
+            # early-EOS request held only its live-token pages, so the
+            # unreached tail was never booked at all.
             self.allocator.free(self._slot_pages[slot])
             self._slot_pages[slot] = None
             self.page_table.clear(slot)
 
-    def _run_chunk(self) -> None:
+    def _top_up(self, now: float) -> None:
+        """Incremental mode: before a chunk, grow any active slot whose
+        writes would cross its allocated page boundary.  When the pool
+        is dry, preempt the weakest runner — possibly the needy slot
+        itself, which then resumes once pages free up."""
+        for slot in range(self.scfg.batch):
+            req = self._slots[slot]
+            if req is None or not self._active[slot]:
+                continue
+            steps = min(self.scfg.decode_chunk,
+                        int(self._remaining[slot]))
+            need = pages_needed(int(self._positions[slot]) + steps,
+                                self._page_size)
+            while need > self.page_table.live_len(slot):
+                got = self.allocator.alloc(
+                    need - self.page_table.live_len(slot))
+                if got is not None:
+                    self.page_table.extend(slot, got)
+                    self._slot_pages[slot].extend(got)
+                    req.cache_rows = max(
+                        req.cache_rows,
+                        len(self._slot_pages[slot]) * self._page_size)
+                    break
+                victim = self._pick_victim(now)
+                # never None: this slot itself is running, hence a
+                # candidate; self-eviction ends its top-up
+                self._evict(victim, now)
+                if victim == slot:
+                    break
+
+    def _run_chunk(self, now: float) -> None:
+        if self._incremental:
+            self._top_up(now)
+            if not self._active.any():
+                return               # top-up evicted the last runner
+        b = self.scfg.batch
+        nsteps = self.scfg.decode_chunk
+        forced = np.full((nsteps, b), -1, np.int32)
+        forced_on = np.zeros((nsteps, b), bool)
+        for slot in range(b):
+            buf = self._slot_forced[slot]
+            if buf and self._slots[slot] is not None:
+                n = min(nsteps, len(buf))
+                forced[:n, slot] = buf[:n]
+                forced_on[:n, slot] = True
+                del buf[:n]
+        self._stat_samples += 1
+        self._stat_running += sum(r is not None for r in self._slots)
+        if self._paged:
+            self._stat_in_use += self.allocator.in_use
         (self._caches, token, positions, active, remaining, self._rng,
          toks, valid) = self._chunk_fn(
             self.params, self._caches, jnp.asarray(self._token),
             jnp.asarray(self._positions), jnp.asarray(self._active),
             jnp.asarray(self._remaining),
-            jnp.asarray(self.page_table.asarray()), self._rng)
+            jnp.asarray(self.page_table.asarray()),
+            jnp.asarray(forced), jnp.asarray(forced_on), self._rng)
         self._token = np.array(token)        # copies: host state is mutable
         self._positions = np.array(positions)
         self._active = np.array(active)
@@ -563,13 +851,34 @@ class Engine:
                     wait = nxt - (time.perf_counter() - self._t0)
                     if wait > 0:
                         time.sleep(min(wait, 0.05))
-                    # wait <= 0 means backpressure with an empty batch —
-                    # impossible (submit caps requests at pool capacity,
-                    # and an empty batch means every page is free), so
-                    # looping back to _admit always makes progress
-                    continue
+                        continue
+                    if nxt > now:
+                        # the request arrived *during* this iteration's
+                        # _admit window (arrival gating hid it from the
+                        # `now` snapshot _admit was given) — loop back
+                        # and admit it with a fresh clock, this is a
+                        # healthy staggered workload, not a stall
+                        continue
+                    # a request _admit could already see went unadmitted
+                    # with every slot idle.  An idle engine holds no
+                    # pages, so this is not backpressure — it is a page
+                    # leak or an unsatisfiable request, and
+                    # overcommit/preemption make the state reachable
+                    # where it was once provably not.  Fail loudly
+                    # rather than spin on _admit forever.
+                    detail = ""
+                    if self._paged:
+                        detail = (f" ({self.allocator.in_use} pages "
+                                  f"still in use, "
+                                  f"{self.allocator.available} free of "
+                                  f"{self.allocator.capacity} "
+                                  f"allocatable)")
+                    raise RuntimeError(
+                        f"serve scheduler stalled: {len(self._queue)} "
+                        f"arrived request(s) cannot be admitted with "
+                        f"all slots idle{detail}")
                 break
-            self._run_chunk()
+            self._run_chunk(time.perf_counter() - self._t0)
         out, self._finished = self._finished, {}
         return out
 
@@ -596,10 +905,21 @@ class Engine:
         self.reset(rng=rng if rng is not None else jax.random.PRNGKey(0))
         ids = [self.submit(prompts[i], n_new) for i in range(b)]
         done = self.run()
-        if any(len(done[i].tokens) != n_new for i in ids):
+        short = [i for i in ids if len(done[i].tokens) != n_new]
+        if short:
+            # the max_len pre-check above rules out submit-time
+            # truncation, so a short ragged output here can only be an
+            # early EOS stop — say which, instead of guessing
+            if any(done[i].truncated for i in short):
+                raise RuntimeError(
+                    f"generate() needs rectangular output but request(s) "
+                    f"{short} were truncated at the max_len="
+                    f"{self.scfg.max_len} budget")
             raise RuntimeError(
-                "generate() needs rectangular output but EOS stopped a "
-                "request early; use submit()/run() for ragged workloads")
+                f"generate() needs rectangular output but request(s) "
+                f"{short} stopped at eos_id={self.scfg.eos_id} before "
+                f"emitting n_new={n_new} tokens; use submit()/run() for "
+                f"ragged workloads or build the engine with eos_id=-1")
         gen = np.stack([np.asarray(done[i].tokens, np.int32) for i in ids])
         return jnp.concatenate([jnp.asarray(prompts), jnp.asarray(gen)],
                                axis=1)

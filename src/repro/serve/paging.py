@@ -16,7 +16,8 @@ Device-side layout (built in ``models.attention`` / ``models.transformer``):
   ``(table[b, pos // page_size], pos % page_size)``.
 
 Page ids are **data, not shape** — one compiled program serves every
-allocation pattern, so slot refill and page recycling never recompile.
+allocation pattern, so slot refill, mid-stream page growth
+(``PageTable.extend``) and page recycling never recompile.
 
 This module is the *host* side: a free-list allocator with admission
 backpressure (``alloc`` returns ``None`` instead of OOMing) and the
@@ -24,6 +25,12 @@ mutable table mirror the engine ships to the device each decode chunk.
 Page 0 is reserved as the **trash page**: idle slots' table rows point
 at it, so their frozen idempotent cache writes land somewhere harmless
 instead of corrupting a recycled page.
+
+Both classes are strict: double-frees, foreign pages, out-of-range or
+reserved page ids, and cross-slot aliasing all raise.  A page-table
+corruption silently aliases one slot's live KV rows into another's
+attention window — the worst failure mode preemption and incremental
+growth make easier to hit — so the bookkeeping refuses instead.
 """
 
 from __future__ import annotations
@@ -46,7 +53,8 @@ class PageAllocator:
     The first ``reserved`` page ids are never handed out (the engine
     uses page 0 as the trash page).  ``alloc`` is all-or-nothing and
     returns ``None`` when the pool cannot satisfy the request — the
-    caller defers admission (backpressure) instead of overcommitting.
+    caller defers admission (backpressure) or preempts a running slot
+    instead of overcommitting the device pool.
     Double-free and foreign-page frees raise: a page leak in the engine
     is a correctness bug (recycled pages carry live KV rows), so the
     allocator is strict enough for tests to assert ``in_use == 0``.
@@ -105,27 +113,99 @@ class PageTable:
     """Mutable host mirror of the ``(batch, max_pages)`` device table.
 
     Every entry defaults to ``trash_page``; ``assign`` fills a slot's
-    row prefix with its allocated pages (positions past the prefix —
-    and every position of an idle slot — resolve to the trash page,
-    where stale idempotent decode writes are harmless).
+    row prefix with its allocated pages and ``extend`` appends pages to
+    a live row mid-stream (incremental allocation: a decode chunk about
+    to cross a page boundary grows its slot by exactly the pages the
+    new rows need).  Positions past the live prefix — and every
+    position of an idle slot — resolve to the trash page, where stale
+    idempotent decode writes are harmless.
+
+    Page ids are validated on every mutation: out of pool bounds
+    (``num_pages``, when given), inside the reserved range (the trash
+    page must never carry live rows), duplicated within a row, or
+    already live in *another* slot's row — all raise ``ValueError``
+    rather than silently aliasing another request's KV.
     """
 
-    def __init__(self, batch: int, max_pages: int, trash_page: int = 0):
+    def __init__(self, batch: int, max_pages: int, trash_page: int = 0,
+                 num_pages: int | None = None, reserved: int = 1):
         self.batch = batch
         self.max_pages = max_pages
         self.trash_page = trash_page
+        self.num_pages = num_pages
+        self.reserved = reserved
         self.table = np.full((batch, max_pages), trash_page, np.int32)
+        self._live_len = np.zeros((batch,), np.int64)
+
+    def _validate(self, slot: int, pages: np.ndarray) -> None:
+        if not 0 <= slot < self.batch:
+            raise ValueError(f"slot {slot} out of range [0, {self.batch})")
+        if pages.ndim != 1:
+            raise ValueError(f"pages must be a flat id list, got shape "
+                             f"{pages.shape}")
+        if self.num_pages is not None:
+            oob = pages[(pages < 0) | (pages >= self.num_pages)]
+            if oob.size:
+                raise ValueError(f"page ids {sorted(set(oob.tolist()))} out "
+                                 f"of pool range [0, {self.num_pages})")
+        rsv = pages[pages < self.reserved]
+        if rsv.size:
+            raise ValueError(f"page ids {sorted(set(rsv.tolist()))} are in "
+                             f"the reserved range [0, {self.reserved}) "
+                             f"(trash page {self.trash_page} cannot carry "
+                             f"live rows)")
+        if np.unique(pages).size != pages.size:
+            dup = sorted({int(p) for p in pages
+                          if (pages == p).sum() > 1})
+            raise ValueError(f"duplicate page ids within one row: {dup}")
+        # cross-slot aliasing: a page live in any *other* slot's prefix
+        # must not be assigned again (two slots' decode writes would
+        # corrupt each other's KV rows)
+        for other in range(self.batch):
+            if other == slot:
+                continue
+            live = self.table[other, :self._live_len[other]]
+            alias = np.intersect1d(pages, live)
+            if alias.size:
+                raise ValueError(f"page ids {alias.tolist()} are already "
+                                 f"live in slot {other}")
 
     def assign(self, slot: int, pages) -> None:
-        pages = np.asarray(pages, np.int32)
+        """Point slot ``slot``'s row prefix at ``pages`` (rest trash)."""
+        pages = np.asarray(pages, np.int32).reshape(-1)
         if pages.size > self.max_pages:
             raise ValueError(f"{pages.size} pages exceed the per-slot "
                              f"maximum of {self.max_pages}")
+        self._validate(slot, pages)
         self.table[slot] = self.trash_page
         self.table[slot, :pages.size] = pages
+        self._live_len[slot] = pages.size
+
+    def extend(self, slot: int, pages) -> None:
+        """Append ``pages`` to slot ``slot``'s live prefix (incremental
+        growth; the new pages cover the rows the next decode chunk will
+        write past the current boundary)."""
+        pages = np.asarray(pages, np.int32).reshape(-1)
+        self._validate(slot, pages)
+        n = int(self._live_len[slot])
+        if n + pages.size > self.max_pages:
+            raise ValueError(f"extending slot {slot} to {n + pages.size} "
+                             f"pages exceeds the per-slot maximum of "
+                             f"{self.max_pages}")
+        dup = np.intersect1d(pages, self.table[slot, :n])
+        if dup.size:
+            raise ValueError(f"page ids {dup.tolist()} are already live in "
+                             f"slot {slot}")
+        self.table[slot, n:n + pages.size] = pages
+        self._live_len[slot] = n + pages.size
+
+    def live_len(self, slot: int) -> int:
+        """Live (non-trash) prefix length of a slot's row."""
+        return int(self._live_len[slot])
 
     def clear(self, slot: int) -> None:
         self.table[slot] = self.trash_page
+        self._live_len[slot] = 0
 
     def row(self, slot: int) -> np.ndarray:
         return self.table[slot].copy()

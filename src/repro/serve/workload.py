@@ -17,7 +17,14 @@ definitions cannot drift apart:
   footprint axis the paged cache exists to shrink;
 * ``priority_mix`` marks that fraction of requests priority 1 (rest 0)
   and splits the latency percentiles per class, so the priority
-  scheduler's effect is visible in one run.
+  scheduler's effect is visible in one run;
+* scheduling counters ride along from ``engine.stats``: ``preemptions``
+  (evict-and-resume events), ``occupancy`` (mean fraction of pool pages
+  in use per decode chunk — the axis incremental allocation raises) and
+  ``concurrency`` (mean admitted requests per chunk — what overcommit
+  buys from the same pool), plus ``truncated`` (requests whose
+  ``max_new_tokens`` was clamped to the ``max_len`` budget at submit —
+  flagged explicitly so a short stream is never misread as early EOS).
 """
 
 from __future__ import annotations
@@ -73,6 +80,7 @@ def run_timed_workload(engine, vocab_size: int, *, requests: int,
     lat = np.asarray([done[i].t_done - done[i].arrival for i in ids])
     ttft = np.asarray([done[i].t_first - done[i].arrival for i in ids])
     cache_rows = np.asarray([done[i].cache_rows for i in ids])
+    stats = engine.stats
     out = {
         "requests": requests,
         "slots": engine.scfg.batch,
@@ -86,6 +94,11 @@ def run_timed_workload(engine, vocab_size: int, *, requests: int,
         "ttft_p50_ms": round(float(np.percentile(ttft, 50)) * 1e3, 1),
         "cache_kb_per_req": round(float(cache_rows.mean())
                                   * engine.cache_token_bytes / 1024.0, 1),
+        "preemptions": stats["preemptions"],
+        "occupancy": round(stats["occupancy"], 3),
+        "concurrency": round(stats["concurrency"], 2),
+        "pool_pages": stats["pool_pages"],
+        "truncated": int(sum(done[i].truncated for i in ids)),
         "compile_s": round(compile_s, 2),
         "compile_counts": engine.compile_counts,
     }

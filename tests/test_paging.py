@@ -85,6 +85,47 @@ def test_page_table_assign_clear():
         t.assign(0, [1, 2, 3, 4, 5])
 
 
+def test_page_table_rejects_corrupting_ids():
+    """assign/extend must refuse out-of-pool, reserved, duplicate and
+    cross-slot-aliased page ids — the silent-corruption class where a
+    buggy caller points two slots' decode writes at one page."""
+    t = PageTable(batch=2, max_pages=4, trash_page=0, num_pages=8,
+                  reserved=1)
+    with pytest.raises(ValueError, match="out of pool range"):
+        t.assign(0, [8])
+    with pytest.raises(ValueError, match="out of pool range"):
+        t.assign(0, [-1])
+    with pytest.raises(ValueError, match="reserved"):
+        t.assign(0, [0, 2])                # trash page as a live page
+    with pytest.raises(ValueError, match="duplicate"):
+        t.assign(0, [3, 3])
+    with pytest.raises(ValueError, match="out of range"):
+        t.assign(5, [2])
+    t.assign(0, [3, 4])
+    with pytest.raises(ValueError, match="already live in slot 0"):
+        t.assign(1, [4, 5])                # aliases slot 0's live page
+    t.clear(0)
+    t.assign(1, [4, 5])                    # fine once slot 0 released it
+
+
+def test_page_table_extend_grows_live_prefix():
+    t = PageTable(batch=2, max_pages=3, trash_page=0, num_pages=8,
+                  reserved=1)
+    t.assign(0, [2])
+    assert t.live_len(0) == 1
+    t.extend(0, [3])
+    np.testing.assert_array_equal(t.row(0), [2, 3, 0])
+    assert t.live_len(0) == 2
+    with pytest.raises(ValueError, match="already live in slot 0"):
+        t.extend(0, [2])                   # duplicate within own row
+    with pytest.raises(ValueError, match="already live in slot 0"):
+        t.extend(1, [3])                   # cross-slot alias
+    with pytest.raises(ValueError, match="exceeds the per-slot"):
+        t.extend(0, [4, 5])                # 2 + 2 > max_pages 3
+    t.clear(0)
+    assert t.live_len(0) == 0
+
+
 # ---------------------------------------------------------------------------
 # Paged decode parity: BIT-identical to the dense slab
 # ---------------------------------------------------------------------------

@@ -68,9 +68,10 @@ def test_greedy_matches_manual_argmax_rollout():
 
 
 def test_serve_step_jits_once_for_all_positions():
+    from repro.serve.engine import _CountingJit
     cfg, params = _setup()
     scfg = ServeConfig(batch=2, max_len=16)
-    step = jax.jit(make_serve_step(cfg, scfg))
+    step = _CountingJit(make_serve_step(cfg, scfg))
     from repro.models import init_caches
     caches = init_caches(cfg, 2, 16)
     tok = jnp.zeros((2, 1), jnp.int32)
@@ -78,7 +79,12 @@ def test_serve_step_jits_once_for_all_positions():
     # different trace-time-identical positions: single compilation
     tok, caches = step(params, caches, tok, 3, rng)
     tok, caches = step(params, caches, tok, 4, rng)
-    assert step._cache_size() == 1
+    assert step.compile_count == 1
+    # cross-check against the real jit cache when the (private,
+    # version-dependent) probe exists — skip silently when it moved
+    probe = getattr(step._fn, "_cache_size", None)
+    if probe is not None:
+        assert probe() == 1
 
 
 def test_temperature_sampling_varies():
