@@ -21,6 +21,13 @@ below the sum of worst-case page counts):
         --workload uniform --requests 16 --cache-mode paged \
         --page-size 8 --alloc-mode incremental --num-pages 24
 
+Prefix caching (shared system prompt served from refcounted read-only
+pages; only the uncached suffix is prefilled):
+
+    PYTHONPATH=src python -m repro.launch.serve --arch qwen3-4b \
+        --workload staggered --requests 16 --cache-mode paged \
+        --page-size 8 --prefix-cache --shared-prefix 0.75
+
 Compile time is reported separately from steady-state throughput (a
 warmup pass triggers every compilation before the timed run).
 """
@@ -51,6 +58,7 @@ def _build(args):
                        decode_chunk=args.decode_chunk,
                        priority_aging_s=args.priority_aging_s,
                        alloc_mode=args.alloc_mode,
+                       prefix_cache=args.prefix_cache,
                        quant_backend=args.quant_backend,
                        cache_mode=args.cache_mode,
                        page_size=args.page_size,
@@ -94,7 +102,8 @@ def run_requests(args, cfg, engine):
     r = run_timed_workload(engine, cfg.vocab_size, requests=args.requests,
                            prompt_budget=args.prompt_len,
                            new_tokens=args.new_tokens, stagger_s=stagger,
-                           priority_mix=args.priority_mix)
+                           priority_mix=args.priority_mix,
+                           shared_prefix=args.shared_prefix)
     print(f"arch={cfg.name} quant={args.quant} backend={args.quant_backend} "
           f"cache={args.cache_mode} workload={args.workload} "
           f"requests={args.requests} slots={args.batch}")
@@ -110,6 +119,9 @@ def run_requests(args, cfg, engine):
         print(f"  pool: {r['pool_pages']} pages, mean occupancy "
               f"{r['occupancy']:.0%}, mean concurrency "
               f"{r['concurrency']:.2f}, preemptions {r['preemptions']}")
+    if args.prefix_cache:
+        print(f"  prefix cache: hit rate {r['prefix_hit_rate']:.0%} of "
+              f"prompt tokens, {r['prefill_tokens']} tokens prefilled")
     if r["truncated"]:
         print(f"  WARNING: {r['truncated']} request(s) truncated at the "
               f"max_len budget")
@@ -159,6 +171,16 @@ def main(argv=None):
                     help="KV pool size in pages (0 = parity with the "
                          "dense slab); set below the worst-case sum to "
                          "overcommit with --alloc-mode incremental")
+    ap.add_argument("--prefix-cache", action="store_true",
+                    help="share read-only prompt-prefix pages across "
+                         "requests (paged cache mode): admission maps "
+                         "cached page-aligned chunks and prefills only "
+                         "the uncached suffix, copy-on-writing a fully "
+                         "covered prompt's tail page")
+    ap.add_argument("--shared-prefix", type=float, default=0.0,
+                    help="fraction of workload requests that begin with "
+                         "one fixed system-prompt head of prompt-len/2 "
+                         "tokens (the workload prefix caching serves)")
     ap.add_argument("--priority-mix", type=float, default=0.0,
                     help="fraction of workload requests submitted at "
                          "priority 1 (rest 0); reports per-class latency")

@@ -1,6 +1,7 @@
 """Model zoo: shared layers + heterogeneous-stack assembly."""
 
 from repro.models.transformer import (  # noqa: F401
+    copy_paged_cache_page,
     decode_step,
     encode,
     forward,
@@ -10,4 +11,5 @@ from repro.models.transformer import (  # noqa: F401
     merge_slot_paged_caches,
     model_init,
     prefill,
+    scatter_prefill_paged_caches,
 )

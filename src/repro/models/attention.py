@@ -22,7 +22,7 @@ from repro.models.layers import apply_rope, rms_norm, rms_norm_init, rope
 __all__ = ["attn_init", "attn_apply", "mla_init", "mla_apply",
            "init_kv_cache", "init_mla_cache", "scatter_cache_rows",
            "init_paged_kv_cache", "init_paged_mla_cache",
-           "scatter_paged_rows", "gather_pages"]
+           "scatter_paged_rows", "scatter_prefill_rows", "gather_pages"]
 
 _NEG_INF = -2.0 ** 30
 
@@ -115,6 +115,43 @@ def gather_pages(pool, table):
     b, mp = table.shape
     g = jnp.take(pool, table, axis=0)           # (B, MP, page_size, ...)
     return g.reshape(b, mp * pool.shape[1], *pool.shape[2:])
+
+
+def scatter_prefill_rows(pool, new, row, start):
+    """Write a prefilled KV segment through one slot's page-table row.
+
+    ``pool``: (num_pages, page_size, ...); ``new``: (1, S, ...) rows for
+    global positions ``start + [0, S)``; ``row``: (max_pages,) int32.
+    Row-granular (unlike the whole-page merge), so a copy-on-write tail
+    page keeps its cached rows below ``start`` while the fresh suffix
+    rows land beside them.  Positions past the slot's budget clamp to
+    the last logical row — those writes carry pad-token garbage and land
+    on the row's trailing entry (an unbooked slot points it at the trash
+    page; a fully booked slot's final row is rewritten by its final
+    decode step before any query can attend to it).
+    """
+    ps = pool.shape[1]
+    s = new.shape[1]
+    pos = jnp.clip(jnp.asarray(start, jnp.int32) + jnp.arange(s), 0,
+                   row.shape[0] * ps - 1)
+    page = jnp.take(row, pos // ps)
+    return pool.at[page, pos % ps].set(new[0].astype(pool.dtype))
+
+
+def _splice_context(ctx, new, context_start):
+    """Fixed-length prefix splice: position ``j`` takes the *cached* row
+    ``ctx[:, j]`` below ``context_start`` and the freshly computed row
+    ``new[:, j - context_start]`` at or above it.  The buffer length
+    stays exactly ``new``'s, so the attention reduction downstream is
+    shape-identical to an uncached full prefill — with ``context_start
+    == 0`` the splice returns ``new``'s values bit-for-bit, which is
+    what keeps cache-miss prefills bit-identical to a no-cache engine's.
+    """
+    s = new.shape[1]
+    shape = (1, s) + (1,) * (new.ndim - 2)
+    is_ctx = (jnp.arange(s) < context_start).reshape(shape)
+    shifted = jnp.roll(new, context_start, axis=1)
+    return jnp.where(is_ctx, ctx[:, :s].astype(new.dtype), shifted)
 
 
 # ---------------------------------------------------------------------------
@@ -258,7 +295,8 @@ def _q8_heads(t):
 def attn_apply(params, cfg, x, *, positions, kind: str = "full",
                cache: dict | None = None, cache_index=None,
                kv_source: jax.Array | None = None, causal: bool = True,
-               return_cache: bool = False, page_table=None):
+               return_cache: bool = False, page_table=None,
+               context_start=None):
     """Returns (out, new_cache).  Modes:
 
     * train/prefill: ``cache=None`` → K/V from ``x`` (or ``kv_source``
@@ -274,6 +312,15 @@ def attn_apply(params, cfg, x, *, positions, kind: str = "full",
       pages back into position order (XLA reference path, bit-identical
       to the dense slab) or, under ``attn_impl="flash"``, runs the
       Pallas paged-decode kernel that walks the table directly.
+    * context prefill (prefix caching): ``cache`` + ``page_table`` +
+      ``context_start`` — ``x`` holds a prompt *suffix* whose queries
+      sit at global positions ``context_start + [0, S)``; the cached
+      prefix rows are gathered from the pools through the table and
+      spliced below the fresh K/V at the same fixed buffer length, so
+      the attention math (and, with ``context_start == 0``, every bit
+      of it) matches an uncached full-prompt prefill.  The computed
+      suffix K/V is returned as ``new_cache`` for the caller to scatter
+      into its own pages — the shared prefix pages are never written.
     """
     b, s, d = x.shape
     h, kvh, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
@@ -310,7 +357,28 @@ def attn_apply(params, cfg, x, *, positions, kind: str = "full",
 
     new_cache = cache
     paged_kernel = False
-    if cache is not None and page_table is not None:
+    if cache is not None and context_start is not None:
+        # prefix-cache suffix prefill: splice the gathered cached prefix
+        # below the fresh suffix K/V at the fixed buffer length (see
+        # _splice_context — bit-identical to a full prefill on a miss).
+        # k_pos is the buffer index: cached row j sits at position j,
+        # fresh row i at context_start + i, exactly where the splice put
+        # them, so plain causal masking covers both.
+        if "k_scale" in cache:
+            raise NotImplementedError(
+                "prefix caching over the int8 KV cache is unsupported: "
+                "cached rows would be dequantized while a solo prefill "
+                "attends full-precision rows, breaking the bit-match "
+                "contract")
+        k_full = _splice_context(gather_pages(cache["k"], page_table), k,
+                                 context_start)
+        v_full = _splice_context(gather_pages(cache["v"], page_table), v,
+                                 context_start)
+        k_pos = jnp.broadcast_to(jnp.arange(s)[None, :], (b, s))
+        if return_cache:  # suffix rows only; the caller scatters them
+            new_cache = {"k": k.astype(jnp.bfloat16),
+                         "v": v.astype(jnp.bfloat16)}
+    elif cache is not None and page_table is not None:
         # paged decode: scatter through the page table into the shared
         # pool, then either gather pages back into position order (XLA
         # reference — bit-identical to the dense slab) or let the Pallas
@@ -502,7 +570,8 @@ def init_paged_mla_cache(cfg, num_pages: int, page_size: int,
 
 
 def mla_apply(params, cfg, x, *, positions, cache=None, cache_index=None,
-              return_cache: bool = False, page_table=None):
+              return_cache: bool = False, page_table=None,
+              context_start=None):
     b, s, d = x.shape
     h = cfg.n_heads
     d_nope, d_rope, d_v = cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim
@@ -529,7 +598,23 @@ def mla_apply(params, cfg, x, *, positions, cache=None, cache_index=None,
         .reshape(b, s, d_rope)
 
     new_cache = cache
-    if cache is not None and page_table is not None:
+    if cache is not None and context_start is not None:
+        # prefix-cache suffix prefill: splice cached latents + rope keys
+        # below the fresh rows at the fixed buffer length, then let the
+        # shared decompression matmul expand the spliced latents exactly
+        # as a full prefill would (cached latents are the bf16 rows a
+        # solo prefill computes, so the splice is bit-transparent)
+        c_kv_f = _splice_context(gather_pages(cache["c_kv"], page_table),
+                                 c_kv, context_start)
+        k_rope_f = _splice_context(gather_pages(cache["k_rope"],
+                                                page_table),
+                                   k_rope_new, context_start)
+        sk = s
+        k_pos = jnp.broadcast_to(jnp.arange(s)[None, :], (b, s))
+        if return_cache:  # suffix rows only; the caller scatters them
+            new_cache = {"c_kv": c_kv.astype(jnp.bfloat16),
+                         "k_rope": k_rope_new.astype(jnp.bfloat16)}
+    elif cache is not None and page_table is not None:
         # paged decode: scatter the latent row through the page table,
         # gather pages back for the shared decompression matmul (the
         # latent is re-expanded per step anyway, so the XLA gather is

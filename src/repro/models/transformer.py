@@ -52,7 +52,8 @@ from repro.models.moe import moe_apply, moe_init
 
 __all__ = ["model_init", "forward", "prefill", "decode_step", "init_caches",
            "init_paged_caches", "merge_slot_caches",
-           "merge_slot_paged_caches", "encode", "unrolled_blocks"]
+           "merge_slot_paged_caches", "scatter_prefill_paged_caches",
+           "copy_paged_cache_page", "encode", "unrolled_blocks"]
 
 # When True, the block stack is a Python loop instead of lax.scan, so the
 # compiled HLO contains every layer body.  Used by the dry-run cost pass:
@@ -103,7 +104,8 @@ def _layer_init(key, cfg: ModelConfig, spec: LayerSpec, *,
 
 def _layer_apply(params, cfg: ModelConfig, spec: LayerSpec, x, *,
                  positions, cache=None, cache_index=None, enc_out=None,
-                 causal=True, mode="train", page_table=None):
+                 causal=True, mode="train", page_table=None,
+                 context_start=None):
     """Returns (x, new_cache, aux_loss)."""
     aux = jnp.zeros((), jnp.float32)
     new_cache: dict = {}
@@ -116,14 +118,16 @@ def _layer_apply(params, cfg: ModelConfig, spec: LayerSpec, x, *,
                                cache=cache.get("attn"),
                                cache_index=cache_index,
                                return_cache=(mode == "prefill"),
-                               page_table=page_table)
+                               page_table=page_table,
+                               context_start=context_start)
         else:
             out, c = attn_apply(params["attn"], cfg, h, positions=positions,
                                 kind=spec.attn_kind,
                                 cache=cache.get("attn"),
                                 cache_index=cache_index, causal=causal,
                                 return_cache=(mode == "prefill"),
-                                page_table=page_table)
+                                page_table=page_table,
+                                context_start=context_start)
         if c is not None:
             new_cache["attn"] = c
         x = x + out
@@ -191,7 +195,7 @@ def _stack_init(key, cfg: ModelConfig, *, cross: bool = False) -> dict:
 
 def _stack_apply(params, cfg: ModelConfig, x, *, positions, caches=None,
                  cache_index=None, enc_out=None, causal=True, mode="train",
-                 page_table=None):
+                 page_table=None, context_start=None):
     """Returns (x, new_caches, total_aux)."""
     total_aux = jnp.zeros((), jnp.float32)
     want_cache = mode in ("prefill", "decode")
@@ -207,7 +211,8 @@ def _stack_apply(params, cfg: ModelConfig, x, *, positions, caches=None,
         return _layer_apply(p, cfg, spec, x, positions=positions,
                             cache=cache, cache_index=cache_index,
                             enc_out=enc_out, causal=causal, mode=mode,
-                            page_table=page_table)
+                            page_table=page_table,
+                            context_start=context_start)
 
     # prefix/suffix layers run OUTSIDE the scanned-and-checkpointed
     # blocks; without their own remat, all their attention internals
@@ -416,7 +421,8 @@ def init_paged_caches(cfg: ModelConfig, batch: int, num_pages: int,
 
 
 def prefill(params, cfg: ModelConfig, tokens, *, extra_embeds=None,
-            frames=None, max_len: int | None = None, logits_index=None):
+            frames=None, max_len: int | None = None, logits_index=None,
+            ctx_caches=None, ctx_table=None, ctx_start=None):
     """Run the prompt, return (next-token logits, caches, enc_out).
 
     ``logits_index`` selects which position's logits to return (default:
@@ -426,13 +432,29 @@ def prefill(params, cfg: ModelConfig, tokens, *, extra_embeds=None,
     compilation serves every request.  (Cache rows written by the pad
     tokens are harmless: decode overwrites row ``p`` before any query
     can attend to it.)
+
+    Context prefill (prefix caching): with ``ctx_caches`` (paged cache
+    pools), ``ctx_table`` (the slot's (1, max_pages) page-table row) and
+    ``ctx_start`` (traced scalar), ``tokens`` holds only the *uncached
+    suffix* of a prompt whose first ``ctx_start`` rows already sit in
+    shared pool pages.  Queries run at global positions ``ctx_start +
+    [0, S)`` and every attention layer splices the gathered cached rows
+    below the fresh ones (see ``attn_apply``); the returned caches hold
+    the suffix rows only.  ``ctx_start`` is data, not shape — one
+    compilation serves hit and miss alike, and a miss (``ctx_start ==
+    0``) is bit-identical to a plain full-prompt prefill.
     """
     enc_out = encode(params, cfg, frames) if frames is not None else None
     x = _embed_inputs(params, cfg, tokens, extra_embeds)
     b, s, _ = x.shape
-    pos = jnp.broadcast_to(jnp.arange(s)[None, :], (b, s))
+    pos = jnp.arange(s)[None, :]
+    if ctx_start is not None:
+        pos = pos + jnp.asarray(ctx_start, jnp.int32)
+    pos = jnp.broadcast_to(pos, (b, s))
     x, caches, _ = _stack_apply(params["stack"], cfg, x, positions=pos,
-                                enc_out=enc_out, mode="prefill")
+                                enc_out=enc_out, mode="prefill",
+                                caches=ctx_caches, page_table=ctx_table,
+                                context_start=ctx_start)
     if logits_index is None:
         x_last = x[:, -1:]
     else:
@@ -528,6 +550,60 @@ def merge_slot_paged_caches(big, one, slot, pages):
         return b_leaf.at[pages[:n_p]].set(rows.astype(b_leaf.dtype))
 
     return jax.tree_util.tree_map_with_path(put, big, one)
+
+
+def scatter_prefill_paged_caches(big, one, slot, row, start):
+    """Row-granular dual of :func:`merge_slot_paged_caches` for prefix
+    caching: write a context-prefilled suffix cache (rows for global
+    positions ``start + [0, S)``) through one slot's page-table ``row``
+    into the shared pools.  Unlike the whole-page merge, writes are per
+    row, so the shared prefix pages *below* ``start`` — and the cached
+    rows a copy-on-write tail page carries below ``start`` — are never
+    touched.  Non-sequence leaves (none on the archs prefix caching
+    admits, but kept for shape parity) scatter at batch slot ``slot``
+    exactly as in the merge."""
+    from repro.models.attention import scatter_prefill_rows
+    row = jnp.asarray(row, jnp.int32)
+
+    def put(path, b_leaf, s_leaf):
+        key = path[-1].key if hasattr(path[-1], "key") else None
+        blk = _is_block_leaf(path)
+        if key not in _SEQ_CACHE_KEYS:
+            b_ax = 1 if blk else 0
+            start_idx = [0] * b_leaf.ndim
+            start_idx[b_ax] = slot
+            return jax.lax.dynamic_update_slice(
+                b_leaf, s_leaf.astype(b_leaf.dtype), tuple(start_idx))
+        if blk:
+            return jax.vmap(
+                lambda pool, new: scatter_prefill_rows(pool, new, row,
+                                                       start)
+            )(b_leaf, s_leaf)
+        return scatter_prefill_rows(b_leaf, s_leaf, row, start)
+
+    return jax.tree_util.tree_map_with_path(put, big, one)
+
+
+def copy_paged_cache_page(caches, src, dst):
+    """Copy pool page ``src`` onto ``dst`` in every sequence-cache pool
+    (the copy-on-write primitive: duplicate a shared tail page into a
+    slot's private page before the slot's first write can land on
+    shared storage).  ``src``/``dst`` are traced scalars, so the copy
+    lives inside the compiled prefill program; the no-COW default is
+    ``src == dst == 0`` — rewriting the trash page with itself, a
+    bit-exact no-op — which keeps the program count at one."""
+    src = jnp.asarray(src, jnp.int32)
+    dst = jnp.asarray(dst, jnp.int32)
+
+    def cp(path, leaf):
+        key = path[-1].key if hasattr(path[-1], "key") else None
+        if key not in _SEQ_CACHE_KEYS:
+            return leaf
+        if _is_block_leaf(path):
+            return leaf.at[:, dst].set(leaf[:, src])
+        return leaf.at[dst].set(leaf[src])
+
+    return jax.tree_util.tree_map_with_path(cp, caches)
 
 
 def decode_step(params, cfg: ModelConfig, token, caches, index, *,

@@ -7,6 +7,7 @@ from repro.serve.engine import (  # noqa: F401
 from repro.serve.paging import (  # noqa: F401
     PageAllocator,
     PageTable,
+    PrefixCache,
     pages_needed,
 )
 from repro.serve.workload import run_timed_workload  # noqa: F401

@@ -43,6 +43,25 @@ program.  Concretely:
   into the pools instead of padding a dense slab to ``max_len``).
   Pad-token cache rows are harmless: decode overwrites row ``p`` before
   any query can attend to it.
+* **Prefix caching (copy-on-write pages).**  With
+  ``prefix_cache=True`` (paged mode only) the engine keeps a host-side
+  index from page-aligned prompt-chunk hashes to the pool pages holding
+  their KV rows (``serve.paging.PrefixCache``).  Admission maps the
+  longest cached prefix into the new slot's page-table row *read-only*
+  (the allocator refcounts holders) and prefills **only the uncached
+  suffix** through the same compiled prefill program — the suffix sits
+  in the padded prompt buffer, a traced ``start`` carries its global
+  position, and every attention layer splices the gathered cached rows
+  below the fresh ones at the fixed buffer length, so a cache miss is
+  bit-identical to a no-cache engine and a hit reuses the paper's
+  logic-reuse idea one level up (compute the shared operand once,
+  reuse it across consumers).  When a prompt is *fully* covered by
+  cached pages, the tail page is **copy-on-written** inside the same
+  program (duplicated into a private page before the last token's KV
+  write could land on shared storage).  Completion and eviction
+  *decrement* refcounts instead of freeing outright, so a victim's
+  shared pages survive for their other holders, and cold index entries
+  are reclaimed LRU-leaf-first under pool pressure.
 * **Priority scheduling.**  The request queue is a priority heap
   (``Request.priority``, higher first; arrival time then submission
   order break ties) with simple aging — every ``priority_aging_s``
@@ -88,14 +107,21 @@ import numpy as np
 
 from repro.configs.base import ModelConfig
 from repro.models import (
+    copy_paged_cache_page,
     decode_step,
     init_caches,
     merge_slot_caches,
     merge_slot_paged_caches,
     prefill,
+    scatter_prefill_paged_caches,
 )
 from repro.models.transformer import _SEQ_CACHE_KEYS
-from repro.serve.paging import PageAllocator, PageTable, pages_needed
+from repro.serve.paging import (
+    PageAllocator,
+    PageTable,
+    PrefixCache,
+    pages_needed,
+)
 
 __all__ = ["ServeConfig", "Request", "make_serve_step", "Engine"]
 
@@ -134,6 +160,15 @@ class ServeConfig:
     # KV cache to page pools + page-table indirection; ``page_size`` /
     # ``num_pages`` size the pool (num_pages=0 → capacity parity with
     # the dense slab).
+    prefix_cache: bool = False        # paged mode only: share read-only
+    #   prompt-prefix pages across requests (hash-indexed page-aligned
+    #   chunks, refcounted pages, copy-on-write on a fully covered
+    #   prompt's tail page).  Admission prefills only the uncached
+    #   suffix through the same compiled prefill; greedy streams stay
+    #   bit-identical to an uncached engine's.  Incompatible with
+    #   mamba-mixer models (recurrent state cannot compose with a
+    #   cached prefix) and the int8 KV cache (cached rows would be
+    #   dequantized where a solo prefill attends full precision).
     quant_mode: str | None = None
     quant_backend: str | None = None
     cache_mode: str | None = None
@@ -160,6 +195,10 @@ class Request:
     #   misread as an early EOS)
     preemptions: int = 0              # times this request was evicted
     #   mid-stream and later resumed
+    chunk_keys: list | None = None    # memoized prefix-index hash chain
+    #   of the prompt's page-aligned chunks (computed on first admission
+    #   probe; the prompt is immutable, and admission re-plans several
+    #   times per placement)
 
     @property
     def text_len(self) -> int:
@@ -321,8 +360,10 @@ def make_serve_step(cfg: ModelConfig, scfg: ServeConfig) -> Callable:
 class Engine:
     """Continuous-batching engine: priority request queue + slot refill +
     chunked jitted decode, over a dense or paged KV cache, with
-    incremental page allocation and evict-and-resume preemption in
-    paged mode.  See the module docstring for the execution model."""
+    incremental page allocation, evict-and-resume preemption and
+    refcounted prefix caching (copy-on-write pages) in paged mode.  See
+    the module docstring for the execution model and ``docs/serving.md``
+    for the operator-facing reference."""
 
     def __init__(self, cfg: ModelConfig, params, scfg: ServeConfig):
         if scfg.prefill_len > scfg.max_len:
@@ -364,6 +405,22 @@ class Engine:
         elif self.cfg.cache_mode != "dense":
             raise ValueError(f"cache_mode must be 'dense' or 'paged', "
                              f"got {self.cfg.cache_mode!r}")
+        if scfg.prefix_cache:
+            if not self._paged:
+                raise ValueError("prefix_cache=True requires "
+                                 "cache_mode='paged' (the dense slab has "
+                                 "no pages to share)")
+            if self._has_mamba:
+                raise ValueError("prefix_cache=True is incompatible with "
+                                 "mamba-mixer models: SSM state is "
+                                 "sequential and cannot be composed from "
+                                 "a cached prefix")
+            if self.cfg.kv_cache_dtype == "int8":
+                raise ValueError("prefix_cache=True is incompatible with "
+                                 "kv_cache_dtype='int8': cached rows are "
+                                 "attended dequantized while a solo "
+                                 "prefill attends full precision, "
+                                 "breaking the bit-match contract")
         # the cache slab/pool is donated: both stages rebind it from the
         # return value, so the update happens in place instead of
         # copying every unmodified row
@@ -393,6 +450,8 @@ class Engine:
         cfg, scfg = self.cfg, self.scfg
         sample = _sampler(scfg)
         paged = self._paged
+        if scfg.prefix_cache:
+            return self._build_prefix_prefill()
 
         def prefill_into_slot(params, caches, prompt, prompt_len, slot,
                               pages, rng):
@@ -407,6 +466,35 @@ class Engine:
                 caches = merge_slot_paged_caches(caches, one, slot, pages)
             else:
                 caches = merge_slot_caches(caches, one, slot)
+            first = sample(logits[:, -1], rng)[0]
+            return caches, first
+
+        return prefill_into_slot
+
+    def _build_prefix_prefill(self):
+        """Prefix-cache variant of the prefill stage: one compiled
+        program serves cache miss, partial hit and fully-covered (COW)
+        admissions alike — the suffix start, the page-table row and the
+        COW page pair are all data, not shape."""
+        cfg, scfg = self.cfg, self.scfg
+        sample = _sampler(scfg)
+
+        def prefill_into_slot(params, caches, suffix, suffix_len, slot,
+                              row, start, cow_src, cow_dst, rng):
+            """suffix: (1, P) padded uncached prompt tail whose first
+            token sits at global position ``start`` (= rows already
+            mapped read-only through ``row``); ``cow_src``/``cow_dst``
+            duplicate a shared tail page into a private one *before*
+            any write (the no-COW default 0/0 rewrites the trash page
+            with itself — a bit-exact no-op)."""
+            caches = copy_paged_cache_page(caches, cow_src, cow_dst)
+            logits, one, _ = prefill(params, cfg, suffix,
+                                     logits_index=suffix_len - 1,
+                                     ctx_caches=caches,
+                                     ctx_table=row[None],
+                                     ctx_start=start)
+            caches = scatter_prefill_paged_caches(caches, one, slot, row,
+                                                  start)
             first = sample(logits[:, -1], rng)[0]
             return caches, first
 
@@ -484,12 +572,24 @@ class Engine:
         self._stat_samples = 0
         self._stat_running = 0
         self._stat_in_use = 0
+        # prefix-cache accounting: real tokens run through the prefill
+        # stage (suffixes only, on a hit) vs prompt tokens served from
+        # cached pages — the observable "prefilled only the suffix"
+        self.prefill_tokens = 0
+        self.cow_copies = 0
+        self._prefix_hits = 0
+        self._cached_prompt_tokens = 0
+        self._total_prompt_tokens = 0
+        self.prefix_cache: PrefixCache | None = None
         if self._paged:
             self.allocator = PageAllocator(self._num_pages, reserved=1)
             self.page_table = PageTable(b, self._max_pages, trash_page=0,
                                         num_pages=self._num_pages,
                                         reserved=1)
             self._slot_pages: list[list[int] | None] = [None] * b
+            if self.scfg.prefix_cache:
+                self.prefix_cache = PrefixCache(self._page_size,
+                                                self.allocator)
         else:
             # dense mode ships an all-zero dummy table so the chunk
             # signature (and its single compilation) is layout-invariant
@@ -519,7 +619,18 @@ class Engine:
                 "occupancy": occ,
                 "concurrency": self._stat_running / n,
                 "pool_pages": self.allocator.num_pages if self._paged
-                else 0}
+                else 0,
+                # prefix-cache counters (zero / empty without the cache):
+                # hit_rate = prompt tokens served from cached pages over
+                # all prompt tokens admitted; prefill_tokens = real
+                # tokens actually run through the prefill stage
+                "prefix_hits": self._prefix_hits,
+                "prefix_hit_rate": (self._cached_prompt_tokens
+                                    / max(1, self._total_prompt_tokens)),
+                "prefill_tokens": self.prefill_tokens,
+                "cow_copies": self.cow_copies,
+                "prefix_pages": (len(self.prefix_cache)
+                                 if self.prefix_cache is not None else 0)}
 
     @property
     def cache_token_bytes(self) -> int:
@@ -597,11 +708,49 @@ class Engine:
     # scheduling loop
     # ------------------------------------------------------------------
 
+    def _prefix_plan(self, req: Request):
+        """(chunk_keys, shared_pages, cow_src, start) for the longest
+        usable cached prefix of ``req.prompt``.  Read-only (no refs
+        taken): ``_can_admit`` probes it, ``_place`` re-derives it and
+        acquires.  A fully covered prompt caps sharing at every page
+        but keeps the tail as ``cow_src``: the last token must still
+        run through the model for its logits, and its KV write needs a
+        private copy-on-write page."""
+        if req.chunk_keys is None:
+            req.chunk_keys = self.prefix_cache.chunk_keys(req.prompt)
+        keys = req.chunk_keys
+        hits = self.prefix_cache.match(keys)
+        p_len = int(req.prompt.size)
+        if hits and len(hits) * self._page_size == p_len:
+            return keys, hits[:-1], hits[-1], p_len - 1
+        return keys, hits, 0, len(hits) * self._page_size
+
+    def _admission_pages(self, req: Request) -> int:
+        """Fresh pages admission must allocate: the booked count minus
+        pages served read-only from the prefix cache."""
+        booked = self._alloc_pages_for(req)
+        if self.prefix_cache is None:
+            return booked
+        _, shared, _, _ = self._prefix_plan(req)
+        return booked - len(shared)
+
     def _can_admit(self, req: Request) -> bool:
         """Admission backpressure: in paged mode the pool must cover the
-        request's booked pages (freed pages un-defer it later)."""
-        return (not self._paged
-                or self.allocator.can_alloc(self._alloc_pages_for(req)))
+        request's booked pages (freed pages un-defer it later).  With
+        the prefix cache, cached pages do not need allocating, and cold
+        index entries are reclaimed (LRU, never this plan's own hits)
+        before deferring."""
+        if not self._paged:
+            return True
+        need = self._admission_pages(req)
+        if self.allocator.can_alloc(need):
+            return True
+        if self.prefix_cache is not None:
+            _, shared, cow_src, _ = self._prefix_plan(req)
+            keep = set(shared) | ({cow_src} if cow_src else set())
+            self.prefix_cache.reclaim(need - self.allocator.available,
+                                      keep=keep)
+        return self.allocator.can_alloc(need)
 
     def _pick_victim(self, now: float, below: int | None = None
                      ) -> int | None:
@@ -646,11 +795,32 @@ class Engine:
         effective priority sits strictly below ``cutoff`` — the
         feasibility bound both preemption paths check before evicting
         anyone, so no runner is ever sacrificed for an arrival that
-        still could not fit afterwards."""
-        return self.allocator.available + sum(
-            len(self._slot_pages[s] or ())
-            for s, r in enumerate(self._slots)
-            if r is not None and self._queue.effective(r, now) < cutoff)
+        still could not fit afterwards.
+
+        Refcount-aware: a shared prefix page counts once, and only when
+        every reference to it belongs to the would-be victims — plus,
+        at most, the prefix index, whose pin the LRU reclaim can drop
+        once the victims are gone (a holder that survives keeps the
+        page off the free list, so such pages recover nothing).  Cold
+        index entries reclaimable *today* are counted separately; the
+        sets are disjoint (reclaimable-now pages have no slot holder),
+        so no page is counted twice.  The index-pin credit cannot
+        overcount either: a pinned chunk only becomes droppable when
+        its whole descendant chain goes cold, and any surviving holder
+        of a descendant chunk necessarily holds every ancestor too —
+        which would show up in this very refcount check."""
+        held: dict[int, int] = {}
+        for s, r in enumerate(self._slots):
+            if r is not None and self._queue.effective(r, now) < cutoff:
+                for p in self._slot_pages[s] or ():
+                    held[p] = held.get(p, 0) + 1
+        pinned = (set(self.prefix_cache.pages)
+                  if self.prefix_cache is not None else set())
+        freed = sum(1 for p, c in held.items()
+                    if self.allocator.refcount(p) == c + (p in pinned))
+        cold = (self.prefix_cache.reclaimable()
+                if self.prefix_cache is not None else 0)
+        return self.allocator.available + freed + cold
 
     def _admit(self, now: float) -> None:
         """Admit arrived requests into free slots, best effective
@@ -668,7 +838,7 @@ class Engine:
                 # arrival's pages are also coverable, else the victim
                 # would lose its slot to an inadmissible head-of-queue
                 if self._paged and (self._evictable_pages(now, cutoff)
-                                    < self._alloc_pages_for(cand)):
+                                    < self._admission_pages(cand)):
                     return
                 victim = self._pick_victim(now, below=cutoff)
                 if victim is None:
@@ -681,7 +851,7 @@ class Engine:
                 # weaker runners until the pool covers it, else defer
                 # (same feasibility bound before any eviction)
                 if (self._evictable_pages(now, cutoff)
-                        < self._alloc_pages_for(cand)):
+                        < self._admission_pages(cand)):
                     return
                 while not self._can_admit(cand):
                     victim = self._pick_victim(now, below=cutoff)
@@ -693,6 +863,49 @@ class Engine:
                     return
             self._place(free, req, now)
 
+    def _prefix_place(self, slot: int, req: Request, rng):
+        """Prefix-cache admission: map the cached prefix read-only, book
+        only the remaining pages, and run the uncached suffix through
+        the shared compiled prefill (a miss is simply ``start == 0``).
+        Afterwards the prompt's full page-aligned chunks — freshly
+        written and mapped alike — are inserted into the index, which
+        takes its own page references so they outlive this request.
+        Returns the first-token logits sample."""
+        p_len = int(req.prompt.size)
+        keys, shared, cow_src, start = self._prefix_plan(req)
+        shared = self.prefix_cache.acquire(keys[:len(shared)])
+        fresh = self.allocator.alloc(self._alloc_pages_for(req)
+                                     - len(shared))
+        if fresh is None:             # _can_admit vouched for this plan
+            raise RuntimeError("page pool changed between admission "
+                               "check and placement")
+        cow_dst = fresh[0] if cow_src else 0
+        pages = shared + fresh
+        self.page_table.assign(slot, pages, shared=set(shared))
+        self._slot_pages[slot] = pages
+        req.cache_rows = max(req.cache_rows,
+                             len(pages) * self._page_size)
+        sfx = req.prompt[start:]
+        sfx_len = p_len - start
+        # the splice buffer must span every key position [0, p_len):
+        # cached rows occupy [0, start) and the fresh suffix lands at
+        # [start, p_len), so without a fixed slot budget the buffer
+        # pads to the FULL prompt length, not the suffix length (which
+        # would roll the fresh keys off the end of a short buffer)
+        pad_len = self.scfg.prefill_len or p_len
+        padded = np.zeros((1, pad_len), np.int32)
+        padded[0, :sfx_len] = sfx
+        self._caches, first = self._prefill_fn(
+            self.params, self._caches, jnp.asarray(padded), sfx_len,
+            slot, jnp.asarray(self.page_table.row(slot)), start,
+            cow_src, cow_dst, rng)
+        self.prefix_cache.insert(keys, pages)
+        self.prefill_tokens += sfx_len
+        self._cached_prompt_tokens += start
+        self._prefix_hits += bool(shared or cow_src)
+        self.cow_copies += bool(cow_src)
+        return first
+
     def _place(self, slot: int, req: Request, now: float) -> None:
         """Prefill a request into a free slot.  Fresh requests sample
         their first token from the prefill logits; resumed requests
@@ -702,27 +915,32 @@ class Engine:
         uninterrupted run."""
         p_len = int(req.prompt.size)
         resumed = bool(req.tokens)
-        if self._has_mamba or not self.scfg.prefill_len:
-            pad_len = p_len              # exact-length prefill
-        else:
-            pad_len = self.scfg.prefill_len
-        if self._paged:
-            # tokens stay at pad_len (page-rounding them would feed
-            # extra pad tokens through mamba mixers); the prefill
-            # stage zero-grows the cache to whole pages instead
-            pages = self.allocator.alloc(self._alloc_pages_for(req))
-            self.page_table.assign(slot, pages)
-            self._slot_pages[slot] = pages
-            req.cache_rows = max(req.cache_rows,
-                                 len(pages) * self._page_size)
-        else:
-            req.cache_rows = self.scfg.max_len
-        padded = np.zeros((1, pad_len), np.int32)
-        padded[0, :p_len] = req.prompt
+        self._total_prompt_tokens += p_len
         self._rng, sub = jax.random.split(self._rng)
-        self._caches, first = self._prefill_fn(
-            self.params, self._caches, jnp.asarray(padded), p_len,
-            slot, jnp.asarray(self.page_table.row(slot)), sub)
+        if self.prefix_cache is not None:
+            first = self._prefix_place(slot, req, sub)
+        else:
+            if self._has_mamba or not self.scfg.prefill_len:
+                pad_len = p_len          # exact-length prefill
+            else:
+                pad_len = self.scfg.prefill_len
+            if self._paged:
+                # tokens stay at pad_len (page-rounding them would feed
+                # extra pad tokens through mamba mixers); the prefill
+                # stage zero-grows the cache to whole pages instead
+                pages = self.allocator.alloc(self._alloc_pages_for(req))
+                self.page_table.assign(slot, pages)
+                self._slot_pages[slot] = pages
+                req.cache_rows = max(req.cache_rows,
+                                     len(pages) * self._page_size)
+            else:
+                req.cache_rows = self.scfg.max_len
+            padded = np.zeros((1, pad_len), np.int32)
+            padded[0, :p_len] = req.prompt
+            self.prefill_tokens += p_len
+            self._caches, first = self._prefill_fn(
+                self.params, self._caches, jnp.asarray(padded), p_len,
+                slot, jnp.asarray(self.page_table.row(slot)), sub)
         if resumed:
             tok = req.tokens[0]
             self._slot_forced[slot] = req.tokens[1:]
@@ -774,8 +992,8 @@ class Engine:
             need = pages_needed(int(self._positions[slot]) + steps,
                                 self._page_size)
             while need > self.page_table.live_len(slot):
-                got = self.allocator.alloc(
-                    need - self.page_table.live_len(slot))
+                deficit = need - self.page_table.live_len(slot)
+                got = self.allocator.alloc(deficit)
                 if got is not None:
                     self.page_table.extend(slot, got)
                     self._slot_pages[slot].extend(got)
@@ -783,6 +1001,11 @@ class Engine:
                         req.cache_rows,
                         len(self._slot_pages[slot]) * self._page_size)
                     break
+                # cold prefix pages go before any runner is preempted
+                if self.prefix_cache is not None and \
+                        self.prefix_cache.reclaim(
+                            deficit - self.allocator.available):
+                    continue
                 victim = self._pick_victim(now)
                 # never None: this slot itself is running, hence a
                 # candidate; self-eviction ends its top-up
@@ -868,8 +1091,11 @@ class Engine:
                     # rather than spin on _admit forever.
                     detail = ""
                     if self._paged:
+                        cached = (len(self.prefix_cache.pages)
+                                  if self.prefix_cache is not None else 0)
                         detail = (f" ({self.allocator.in_use} pages "
-                                  f"still in use, "
+                                  f"still in use — {cached} pinned by "
+                                  f"the prefix index — "
                                   f"{self.allocator.available} free of "
                                   f"{self.allocator.capacity} "
                                   f"allocatable)")
@@ -881,6 +1107,13 @@ class Engine:
             self._run_chunk(time.perf_counter() - self._t0)
         out, self._finished = self._finished, {}
         return out
+
+    def release_prefix_cache(self) -> None:
+        """Drop every page reference the prefix index holds (teardown /
+        leak checks: after a drained engine releases the cache, the
+        allocator must report ``in_use == 0``)."""
+        if self.prefix_cache is not None:
+            self.prefix_cache.drop()
 
     # ------------------------------------------------------------------
     # batch convenience API (examples / tests)

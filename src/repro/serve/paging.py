@@ -26,18 +26,51 @@ Page 0 is reserved as the **trash page**: idle slots' table rows point
 at it, so their frozen idempotent cache writes land somewhere harmless
 instead of corrupting a recycled page.
 
-Both classes are strict: double-frees, foreign pages, out-of-range or
-reserved page ids, and cross-slot aliasing all raise.  A page-table
-corruption silently aliases one slot's live KV rows into another's
-attention window — the worst failure mode preemption and incremental
-growth make easier to hit — so the bookkeeping refuses instead.
+**Reference counting & prefix sharing.**  The paper's core trick is
+logic reuse — compute the broadcast operand's scaled multiples once and
+reuse them across every vector lane.  Prefix caching applies the same
+principle to KV storage: requests sharing a page-aligned prompt prefix
+map the *same* read-only pool pages instead of recomputing and storing
+identical rows per request.  That makes page ownership plural, so the
+allocator counts references: ``alloc`` hands a page out at refcount 1,
+``share`` adds a holder, ``free`` *decrements* and recycles the page
+only when the count reaches zero.  The refcount rules are:
+
+* a page is **writable only by its sole holder at refcount 1** — the
+  engine guarantees shared (prefix) pages are never written by mapping
+  them strictly below every holder's first write position, and
+  copy-on-writes the partial tail page (duplicate, remap, then write the
+  private copy) whenever a request's writes would land on shared rows;
+* ``free`` on a page the caller does not hold (refcount already zero →
+  the page went back to the free list) raises — the double-decrement
+  class stays loud;
+* leak detection extends to refcounts: ``in_use`` counts pages with any
+  holder, so a drained engine asserts ``in_use == 0`` only after the
+  prefix index drops its own references (``PrefixCache.drop``).
+
+``PrefixCache`` is the host-side prefix index: prompt tokens are split
+into page-aligned chunks, each chunk keyed by a running hash chain (so a
+chunk's key commits to the whole prefix before it), and mapped to the
+pool page that holds its KV rows.  The cache holds one reference per
+indexed page; cold entries are reclaimed leaf-first in LRU order under
+pool pressure (an interior chunk is never dropped before its
+descendants, so every cached chain stays contiguous from chunk 0).
+
+Both table classes are strict: double-frees, foreign pages, out-of-range
+or reserved page ids, and cross-slot aliasing (outside the declared
+shared set) all raise.  A page-table corruption silently aliases one
+slot's live KV rows into another's attention window — the worst failure
+mode preemption, incremental growth and prefix sharing make easier to
+hit — so the bookkeeping refuses instead.
 """
 
 from __future__ import annotations
 
+import hashlib
+
 import numpy as np
 
-__all__ = ["PageAllocator", "PageTable", "pages_needed"]
+__all__ = ["PageAllocator", "PageTable", "PrefixCache", "pages_needed"]
 
 
 def pages_needed(rows: int, page_size: int) -> int:
@@ -48,16 +81,26 @@ def pages_needed(rows: int, page_size: int) -> int:
 
 
 class PageAllocator:
-    """LIFO free-list over a fixed pool of ``num_pages`` pages.
+    """Refcounted LIFO free-list over a fixed pool of ``num_pages`` pages.
 
     The first ``reserved`` page ids are never handed out (the engine
     uses page 0 as the trash page).  ``alloc`` is all-or-nothing and
     returns ``None`` when the pool cannot satisfy the request — the
     caller defers admission (backpressure) or preempts a running slot
     instead of overcommitting the device pool.
-    Double-free and foreign-page frees raise: a page leak in the engine
-    is a correctness bug (recycled pages carry live KV rows), so the
-    allocator is strict enough for tests to assert ``in_use == 0``.
+
+    Pages are reference counted so prefix caching can map one page into
+    several holders (sharing slots plus the prefix index itself):
+    ``alloc`` hands pages out at refcount 1, ``share`` registers an
+    extra holder, and ``free`` decrements — a page returns to the free
+    list only when its count reaches zero.  Holders that never share
+    see the classic alloc/free contract unchanged.
+
+    Double-decrements and foreign-page frees raise: a page leak in the
+    engine is a correctness bug (recycled pages carry live KV rows), so
+    the allocator is strict enough for tests to assert ``in_use == 0``
+    once every holder — including the prefix index — has released its
+    references.
     """
 
     def __init__(self, num_pages: int, reserved: int = 1):
@@ -69,7 +112,7 @@ class PageAllocator:
         # LIFO: freshly freed pages are reused first (their rows are the
         # most likely to still be resident in any cache hierarchy)
         self._free: list[int] = list(range(num_pages - 1, reserved - 1, -1))
-        self._live: set[int] = set()
+        self._refs: dict[int, int] = {}
 
     @property
     def capacity(self) -> int:
@@ -82,31 +125,54 @@ class PageAllocator:
 
     @property
     def in_use(self) -> int:
-        return len(self._live)
+        """Pages with at least one holder (shared pages count once)."""
+        return len(self._refs)
+
+    def refcount(self, page: int) -> int:
+        """Holders of ``page`` (0 = on the free list / never handed out)."""
+        return self._refs.get(page, 0)
 
     def can_alloc(self, n: int) -> bool:
         return n <= len(self._free)
 
     def alloc(self, n: int) -> list[int] | None:
-        """Pop ``n`` pages, or ``None`` (backpressure) if unavailable."""
+        """Pop ``n`` pages at refcount 1 each, or ``None``
+        (backpressure) if unavailable."""
         if n < 0:
             raise ValueError(f"cannot allocate {n} pages")
         if n > len(self._free):
             return None
         pages = [self._free.pop() for _ in range(n)]
-        self._live.update(pages)
+        for p in pages:
+            self._refs[p] = 1
         return pages
 
-    def free(self, pages) -> None:
-        """Return pages to the pool.  Raises on double-free or on a page
-        the allocator never handed out."""
+    def share(self, pages) -> None:
+        """Register one extra holder per page (prefix reuse: a new slot
+        maps an already-live page read-only, or the prefix index pins a
+        freshly written prompt page).  Raises on pages with no current
+        holder — only live pages can be shared."""
         pages = list(pages)
-        bad = [p for p in pages if p not in self._live]
+        bad = [p for p in pages if p not in self._refs]
+        if bad:
+            raise ValueError(f"sharing pages not currently allocated: {bad}")
+        for p in pages:
+            self._refs[p] += 1
+
+    def free(self, pages) -> None:
+        """Drop one reference per page; a page is recycled to the free
+        list only when its last holder releases it.  Raises on a page
+        with no outstanding references (double-decrement, or a page the
+        allocator never handed out)."""
+        pages = list(pages)
+        bad = [p for p in pages if p not in self._refs]
         if bad:
             raise ValueError(f"freeing pages not currently allocated: {bad}")
         for p in pages:
-            self._live.remove(p)
-            self._free.append(p)
+            self._refs[p] -= 1
+            if self._refs[p] == 0:
+                del self._refs[p]
+                self._free.append(p)
 
 
 class PageTable:
@@ -124,7 +190,11 @@ class PageTable:
     (``num_pages``, when given), inside the reserved range (the trash
     page must never carry live rows), duplicated within a row, or
     already live in *another* slot's row — all raise ``ValueError``
-    rather than silently aliasing another request's KV.
+    rather than silently aliasing another request's KV.  Prefix caching
+    makes some aliasing legitimate: ``assign`` takes a ``shared`` set of
+    page ids that are *declared* read-only multi-holder pages (the
+    refcounted prefix pages), which are exempt from the cross-slot check
+    — every other page id must still be exclusively owned.
     """
 
     def __init__(self, batch: int, max_pages: int, trash_page: int = 0,
@@ -137,7 +207,8 @@ class PageTable:
         self.table = np.full((batch, max_pages), trash_page, np.int32)
         self._live_len = np.zeros((batch,), np.int64)
 
-    def _validate(self, slot: int, pages: np.ndarray) -> None:
+    def _validate(self, slot: int, pages: np.ndarray,
+                  shared=frozenset()) -> None:
         if not 0 <= slot < self.batch:
             raise ValueError(f"slot {slot} out of range [0, {self.batch})")
         if pages.ndim != 1:
@@ -160,23 +231,27 @@ class PageTable:
             raise ValueError(f"duplicate page ids within one row: {dup}")
         # cross-slot aliasing: a page live in any *other* slot's prefix
         # must not be assigned again (two slots' decode writes would
-        # corrupt each other's KV rows)
+        # corrupt each other's KV rows) — unless it is a declared
+        # read-only shared prefix page, whose holders never write it
         for other in range(self.batch):
             if other == slot:
                 continue
             live = self.table[other, :self._live_len[other]]
             alias = np.intersect1d(pages, live)
+            alias = alias[~np.isin(alias, list(shared))] if shared else alias
             if alias.size:
                 raise ValueError(f"page ids {alias.tolist()} are already "
                                  f"live in slot {other}")
 
-    def assign(self, slot: int, pages) -> None:
-        """Point slot ``slot``'s row prefix at ``pages`` (rest trash)."""
+    def assign(self, slot: int, pages, shared=frozenset()) -> None:
+        """Point slot ``slot``'s row prefix at ``pages`` (rest trash).
+        ``shared`` declares which of the ids are refcounted read-only
+        prefix pages, legitimately mapped into other rows too."""
         pages = np.asarray(pages, np.int32).reshape(-1)
         if pages.size > self.max_pages:
             raise ValueError(f"{pages.size} pages exceed the per-slot "
                              f"maximum of {self.max_pages}")
-        self._validate(slot, pages)
+        self._validate(slot, pages, frozenset(shared))
         self.table[slot] = self.trash_page
         self.table[slot, :pages.size] = pages
         self._live_len[slot] = pages.size
@@ -212,3 +287,165 @@ class PageTable:
 
     def asarray(self) -> np.ndarray:
         return self.table
+
+
+class _PrefixEntry:
+    __slots__ = ("page", "parent", "children", "last_used")
+
+    def __init__(self, page: int, parent: bytes | None):
+        self.page = page
+        self.parent = parent
+        self.children = 0
+        self.last_used = 0
+
+
+class PrefixCache:
+    """Host-side prefix index: page-aligned prompt chunks → pool pages.
+
+    A prompt's first ``len(prompt) // page_size`` full chunks are keyed
+    by a running hash chain — chunk ``j``'s key digests chunk ``j-1``'s
+    key plus chunk ``j``'s tokens, so one key commits to the *entire*
+    prefix before it and two prompts share an entry only when every
+    earlier token matches.  Each entry maps its key to the pool page
+    holding that chunk's KV rows; the cache itself holds **one
+    allocator reference per indexed page** (``insert`` shares, ``drop``
+    / ``reclaim`` free), so a page survives the request that wrote it
+    and later requests can map it read-only.
+
+    Reclaim is LRU over *leaf* entries only (an interior chunk is never
+    dropped before its descendants — a chain with a hole would be
+    unreachable but still pinned), and only entries whose page has no
+    holder besides the cache (refcount 1) are dropped: evicting a page
+    another slot still maps would gain the pool nothing.
+    """
+
+    def __init__(self, page_size: int, allocator: PageAllocator):
+        if page_size < 1:
+            raise ValueError(f"page_size must be >= 1, got {page_size}")
+        self.page_size = page_size
+        self.allocator = allocator
+        self._entries: dict[bytes, _PrefixEntry] = {}
+        self._clock = 0
+
+    def __len__(self) -> int:
+        return len(self._entries)
+
+    @property
+    def pages(self) -> list[int]:
+        """Pool pages currently pinned by the index."""
+        return [e.page for e in self._entries.values()]
+
+    def chunk_keys(self, tokens) -> list[bytes]:
+        """Hash-chain keys for every *full* page-aligned chunk of
+        ``tokens`` (the partial tail chunk is never indexed)."""
+        tokens = np.asarray(tokens, np.int32).reshape(-1)
+        keys, prev = [], b""
+        for j in range(tokens.size // self.page_size):
+            chunk = tokens[j * self.page_size:(j + 1) * self.page_size]
+            prev = hashlib.blake2b(prev + chunk.tobytes(),
+                                   digest_size=16).digest()
+            keys.append(prev)
+        return keys
+
+    def match(self, keys: list[bytes]) -> list[int]:
+        """Pages of the longest cached *consecutive* chunk run from
+        chunk 0.  Read-only: no references taken, no LRU bump — safe
+        for admission-feasibility probes."""
+        pages = []
+        for key in keys:
+            e = self._entries.get(key)
+            if e is None:
+                break
+            pages.append(e.page)
+        return pages
+
+    def acquire(self, keys: list[bytes]) -> list[int]:
+        """``match`` + take one reference per hit page for the caller
+        (released through the allocator's normal ``free``) and bump the
+        hit entries' LRU clocks."""
+        pages = self.match(keys)
+        self.allocator.share(pages)
+        self._clock += 1
+        for key in keys[:len(pages)]:
+            self._entries[key].last_used = self._clock
+        return pages
+
+    def insert(self, keys: list[bytes], pages) -> int:
+        """Index chunk ``j`` → ``pages[j]`` for every not-yet-cached
+        chunk, taking the cache's own reference on each newly indexed
+        page.  Returns the number of entries added.  ``pages`` must be
+        live position-ordered pages of one slot's row (the caller just
+        wrote — or mapped — those chunks' KV rows)."""
+        pages = list(pages)
+        if len(pages) < len(keys):
+            raise ValueError(f"{len(keys)} chunk keys but only "
+                             f"{len(pages)} pages")
+        self._clock += 1
+        added, prev = 0, None
+        for key, page in zip(keys, pages):
+            e = self._entries.get(key)
+            if e is None:
+                self.allocator.share([page])
+                e = _PrefixEntry(page, prev)
+                self._entries[key] = e
+                if prev is not None:
+                    self._entries[prev].children += 1
+                added += 1
+            e.last_used = self._clock
+            prev = key
+        return added
+
+    def _droppable(self, keep=frozenset()):
+        """Cold leaf entries whose page only the cache still holds."""
+        return [(e.last_used, k) for k, e in self._entries.items()
+                if e.children == 0 and e.page not in keep
+                and self.allocator.refcount(e.page) == 1]
+
+    def _drop_entry(self, key: bytes) -> None:
+        e = self._entries.pop(key)
+        if e.parent is not None and e.parent in self._entries:
+            self._entries[e.parent].children -= 1
+        self.allocator.free([e.page])
+
+    def reclaim(self, n: int, keep=frozenset()) -> int:
+        """Free up to ``n`` cold pages back to the pool, LRU leaf-first
+        (dropping a leaf may expose its parent for the next round).
+        ``keep`` protects pages an in-flight admission plan counts as
+        hits.  Returns the number of pages actually freed."""
+        keep = frozenset(keep)
+        freed = 0
+        while freed < n:
+            cold = self._droppable(keep)
+            if not cold:
+                break
+            cold.sort()
+            for _, key in cold[:n - freed]:
+                self._drop_entry(key)
+                freed += 1
+        return freed
+
+    def reclaimable(self) -> int:
+        """Pages ``reclaim`` could free right now (iterated to a fixed
+        point on a shadow of the children counts — a cold chain frees
+        its interior chunks once the leaves go)."""
+        children = {k: e.children for k, e in self._entries.items()}
+        dropped: set[bytes] = set()
+        while True:
+            cold = [k for k, e in self._entries.items()
+                    if k not in dropped and children[k] == 0
+                    and self.allocator.refcount(e.page) == 1]
+            if not cold:
+                return len(dropped)
+            for k in cold:
+                dropped.add(k)
+                parent = self._entries[k].parent
+                if parent in children:
+                    children[parent] -= 1
+
+    def drop(self) -> None:
+        """Release every cache-held reference and clear the index (leak
+        checks and engine teardown: after ``drop`` a drained engine's
+        allocator must report ``in_use == 0``)."""
+        for e in self._entries.values():
+            self.allocator.free([e.page])
+        self._entries.clear()

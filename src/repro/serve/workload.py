@@ -18,6 +18,12 @@ definitions cannot drift apart:
 * ``priority_mix`` marks that fraction of requests priority 1 (rest 0)
   and splits the latency percentiles per class, so the priority
   scheduler's effect is visible in one run;
+* ``shared_prefix`` gives that fraction of requests a common "system
+  prompt" head of ``prompt_budget // 2`` tokens (the rest of each
+  prompt stays random) — the workload prefix caching exists for; the
+  engine's ``prefix_hit_rate`` (prompt tokens served from cached pages)
+  and ``prefill_tokens`` (tokens actually run through prefill) ride
+  along in the stats so the cache's effect is measurable;
 * scheduling counters ride along from ``engine.stats``: ``preemptions``
   (evict-and-resume events), ``occupancy`` (mean fraction of pool pages
   in use per decode chunk — the axis incremental allocation raises) and
@@ -39,10 +45,13 @@ __all__ = ["run_timed_workload"]
 def run_timed_workload(engine, vocab_size: int, *, requests: int,
                        prompt_budget: int, new_tokens: int,
                        stagger_s: float = 0.0, seed: int = 0,
-                       priority_mix: float = 0.0) -> dict:
+                       priority_mix: float = 0.0,
+                       shared_prefix: float = 0.0) -> dict:
     """Submit ``requests`` random prompts (lengths in
     [prompt_budget/2, prompt_budget], arrivals spaced ``stagger_s``
-    apart), drain the engine, and return throughput/latency stats."""
+    apart), drain the engine, and return throughput/latency stats.
+    ``shared_prefix`` requests begin with one fixed system-prompt head
+    of ``prompt_budget // 2`` tokens."""
     # validate up front: requests == 0 crashes the percentile math below
     # and prompt_budget < 2 turns the rng.integers bounds inside out
     # (low = max(2, budget // 2) would exceed high = budget + 1)
@@ -57,21 +66,38 @@ def run_timed_workload(engine, vocab_size: int, *, requests: int,
     if not 0.0 <= priority_mix <= 1.0:
         raise ValueError(f"priority_mix must be in [0, 1], got "
                          f"{priority_mix}")
+    if not 0.0 <= shared_prefix <= 1.0:
+        raise ValueError(f"shared_prefix must be in [0, 1], got "
+                         f"{shared_prefix}")
     rng = np.random.default_rng(seed)
     lens = rng.integers(max(2, prompt_budget // 2), prompt_budget + 1,
                         requests)
     prios = (rng.random(requests) < priority_mix).astype(np.int32)
+    shared = rng.random(requests) < shared_prefix
+    sys_prompt = rng.integers(0, vocab_size, prompt_budget // 2)
+
+    def make_prompt(i):
+        n = int(lens[i])
+        if not shared[i]:
+            return rng.integers(0, vocab_size, n)
+        # shared head + ≥1 private token so every prompt stays distinct
+        # from the bare system prompt (lengths are re-drawn up to the
+        # budget, never past it)
+        n = max(n, sys_prompt.size + 1)
+        tail = rng.integers(0, vocab_size, n - sys_prompt.size)
+        return np.concatenate([sys_prompt, tail])
 
     # warmup: trigger every compilation outside the timed window
     engine.submit(rng.integers(0, vocab_size, int(lens[0])), 2)
     t0 = time.perf_counter()
     engine.run()
     compile_s = time.perf_counter() - t0
-    engine.reset()
+    engine.reset()           # also empties the prefix index: the timed
+    #                          run starts from a cold cache
 
-    ids = [engine.submit(rng.integers(0, vocab_size, int(n)), new_tokens,
+    ids = [engine.submit(make_prompt(i), new_tokens,
                          arrival=i * stagger_s, priority=int(prios[i]))
-           for i, n in enumerate(lens)]
+           for i in range(requests)]
     t0 = time.perf_counter()
     done = engine.run()
     wall = time.perf_counter() - t0
@@ -98,6 +124,8 @@ def run_timed_workload(engine, vocab_size: int, *, requests: int,
         "occupancy": round(stats["occupancy"], 3),
         "concurrency": round(stats["concurrency"], 2),
         "pool_pages": stats["pool_pages"],
+        "prefix_hit_rate": round(stats["prefix_hit_rate"], 3),
+        "prefill_tokens": stats["prefill_tokens"],
         "truncated": int(sum(done[i].truncated for i in ids)),
         "compile_s": round(compile_s, 2),
         "compile_counts": engine.compile_counts,

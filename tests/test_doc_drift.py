@@ -1,0 +1,49 @@
+"""CI doc-drift check: docs/serving.md must name every serving knob,
+and the checker must actually fail when one goes missing."""
+
+import pathlib
+import shutil
+import subprocess
+import sys
+
+REPO = pathlib.Path(__file__).resolve().parent.parent
+CHECKER = REPO / "tools" / "check_doc_drift.py"
+
+
+def _run(repo):
+    return subprocess.run([sys.executable, str(CHECKER), "--repo",
+                           str(repo)], capture_output=True, text=True)
+
+
+def test_docs_cover_every_flag_and_field():
+    r = _run(REPO)
+    assert r.returncode == 0, r.stderr
+
+
+def test_checker_fails_when_doc_drops_a_flag(tmp_path):
+    """Remove one flag from a copy of the doc: the check must fail and
+    name it (the whole point — a removed/undocumented knob cannot pass
+    CI silently)."""
+    for rel in ("src/repro/launch/serve.py", "src/repro/serve/engine.py",
+                "docs/serving.md"):
+        dst = tmp_path / rel
+        dst.parent.mkdir(parents=True, exist_ok=True)
+        shutil.copy(REPO / rel, dst)
+    doc = tmp_path / "docs" / "serving.md"
+    doc.write_text(doc.read_text().replace("--prefix-cache", "--x"))
+    r = _run(tmp_path)
+    assert r.returncode == 1
+    assert "--prefix-cache" in r.stderr
+
+
+def test_checker_fails_when_doc_drops_a_config_field(tmp_path):
+    for rel in ("src/repro/launch/serve.py", "src/repro/serve/engine.py",
+                "docs/serving.md"):
+        dst = tmp_path / rel
+        dst.parent.mkdir(parents=True, exist_ok=True)
+        shutil.copy(REPO / rel, dst)
+    doc = tmp_path / "docs" / "serving.md"
+    doc.write_text(doc.read_text().replace("`prefix_cache`", "`x`"))
+    r = _run(tmp_path)
+    assert r.returncode == 1
+    assert "prefix_cache" in r.stderr

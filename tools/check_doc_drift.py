@@ -1,0 +1,90 @@
+"""Doc-drift check: serving docs must name every serving knob.
+
+Asserts that every ``--flag`` registered by ``repro.launch.serve``'s
+argparse parser and every field of ``repro.serve.ServeConfig`` appears
+(verbatim, backtick-quoted or not) in ``docs/serving.md``.  Wired into
+CI so the reference doc cannot silently rot when a knob is added — the
+check fails the build until the doc names it.
+
+Parses source with ``ast`` (no imports of the package, so it runs
+before dependencies are installed):
+
+    python tools/check_doc_drift.py [--repo PATH]
+
+Exit status 0 when the doc covers everything, 1 with a listing of the
+missing names otherwise.
+"""
+
+from __future__ import annotations
+
+import argparse
+import ast
+import pathlib
+import sys
+
+SERVE_LAUNCHER = "src/repro/launch/serve.py"
+SERVE_CONFIG = "src/repro/serve/engine.py"
+SERVING_DOC = "docs/serving.md"
+
+
+def argparse_flags(path: pathlib.Path) -> list[str]:
+    """Every ``--flag`` string literal passed to ``add_argument``."""
+    tree = ast.parse(path.read_text())
+    flags = []
+    for node in ast.walk(tree):
+        if (isinstance(node, ast.Call)
+                and isinstance(node.func, ast.Attribute)
+                and node.func.attr == "add_argument"):
+            for arg in node.args:
+                if (isinstance(arg, ast.Constant)
+                        and isinstance(arg.value, str)
+                        and arg.value.startswith("--")):
+                    flags.append(arg.value)
+    return flags
+
+
+def dataclass_fields(path: pathlib.Path, cls_name: str) -> list[str]:
+    """Annotated field names of class ``cls_name``."""
+    tree = ast.parse(path.read_text())
+    for node in ast.walk(tree):
+        if isinstance(node, ast.ClassDef) and node.name == cls_name:
+            return [stmt.target.id for stmt in node.body
+                    if isinstance(stmt, ast.AnnAssign)
+                    and isinstance(stmt.target, ast.Name)]
+    raise SystemExit(f"class {cls_name} not found in {path}")
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--repo", default=None,
+                    help="repo root (default: this script's parent's "
+                         "parent)")
+    args = ap.parse_args(argv)
+    root = (pathlib.Path(args.repo) if args.repo
+            else pathlib.Path(__file__).resolve().parent.parent)
+
+    doc = (root / SERVING_DOC).read_text()
+    missing = []
+    for flag in argparse_flags(root / SERVE_LAUNCHER):
+        if flag not in doc:
+            missing.append(f"launcher flag {flag}")
+    for field in dataclass_fields(root / SERVE_CONFIG, "ServeConfig"):
+        if f"`{field}`" not in doc:
+            missing.append(f"ServeConfig field `{field}`")
+
+    if missing:
+        print(f"{SERVING_DOC} is missing {len(missing)} serving "
+              f"knob(s):", file=sys.stderr)
+        for m in missing:
+            print(f"  - {m}", file=sys.stderr)
+        print("document every knob in the ServeConfig reference table / "
+              "launcher-flags section of docs/serving.md",
+              file=sys.stderr)
+        return 1
+    print(f"doc-drift check OK: every launcher flag and ServeConfig "
+          f"field appears in {SERVING_DOC}")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())
