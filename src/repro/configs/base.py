@@ -13,7 +13,13 @@ import importlib
 from typing import Sequence
 
 __all__ = ["ModelConfig", "LayerSpec", "get_config", "reduced",
-           "ARCH_NAMES"]
+           "spec_split", "ARCH_NAMES"]
+
+# QuantLinear execution modes a draft model may run under (mirrors
+# core.linear.QuantMode); the verifier side of a self-speculative pair
+# is always "dense" — accepted tokens must be exactly what the dense
+# model would have emitted.
+QUANT_MODES = ("dense", "qat", "w8a8_nibble", "w4a8_nibble", "lut")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -173,6 +179,27 @@ def get_config(name: str, **overrides) -> ModelConfig:
     mod = importlib.import_module(f"repro.configs.{mod_name}")
     cfg: ModelConfig = mod.CONFIG
     return cfg.replace(**overrides) if overrides else cfg
+
+
+def spec_split(cfg: ModelConfig, draft_mode: str | None = None
+               ) -> tuple[ModelConfig, ModelConfig]:
+    """``(draft_cfg, verify_cfg)`` for self-speculative decoding.
+
+    The paper's low-power nibble path and the dense reference are two
+    execution modes over the *same weights*; self-speculation runs them
+    as a draft/verify pair.  The draft keeps every serving knob of
+    ``cfg`` but executes under ``draft_mode`` (default: ``cfg``'s own
+    ``quant_mode`` — i.e. "the quantized deployment drafts for itself");
+    the verifier is the same config pinned to ``quant_mode="dense"``,
+    because the acceptance contract is defined against what the dense
+    model would emit.  Cache layout, page geometry and attention
+    settings are shared — both programs read and write the *same* KV
+    pools."""
+    draft = draft_mode or cfg.quant_mode
+    if draft not in QUANT_MODES:
+        raise ValueError(f"unknown draft quant mode {draft!r}; expected "
+                         f"one of {QUANT_MODES}")
+    return cfg.replace(quant_mode=draft), cfg.replace(quant_mode="dense")
 
 
 def reduced(cfg: ModelConfig) -> ModelConfig:

@@ -28,6 +28,16 @@ pages; only the uncached suffix is prefilled):
         --workload staggered --requests 16 --cache-mode paged \
         --page-size 8 --prefix-cache --shared-prefix 0.75
 
+Self-speculative decoding (the quantized program drafts --spec-k
+tokens, one dense multi-token forward verifies them; greedy streams
+stay bit-identical to the non-spec dense engine) under a bursty
+heavy-tail workload:
+
+    PYTHONPATH=src python -m repro.launch.serve --arch qwen3-4b \
+        --workload bursty --requests 16 --stagger-ms 50 \
+        --cache-mode paged --alloc-mode incremental \
+        --spec-decode --spec-k 4 --spec-quant w8a8_nibble
+
 Compile time is reported separately from steady-state throughput (a
 warmup pass triggers every compilation before the timed run).
 """
@@ -62,7 +72,10 @@ def _build(args):
                        quant_backend=args.quant_backend,
                        cache_mode=args.cache_mode,
                        page_size=args.page_size,
-                       num_pages=args.num_pages or None)
+                       num_pages=args.num_pages or None,
+                       spec_decode=args.spec_decode,
+                       spec_k=args.spec_k,
+                       spec_quant_mode=args.spec_quant)
     return cfg, params, Engine(cfg, params, scfg)
 
 
@@ -95,15 +108,19 @@ def run_batch(args, cfg, engine):
 
 def run_requests(args, cfg, engine):
     """Request-level workload: ``uniform`` submits everything at t=0,
-    ``staggered`` spaces arrivals by --stagger-ms (slots refill
-    mid-stream)."""
+    ``staggered`` spaces arrivals by --stagger-ms, ``bursty`` clusters
+    Poisson bursts at the same mean load with Pareto heavy-tail prompt
+    lengths (slots refill mid-stream in all three)."""
     from repro.serve import run_timed_workload
-    stagger = args.stagger_ms / 1000.0 if args.workload == "staggered" else 0.0
+    stagger = args.stagger_ms / 1000.0 \
+        if args.workload in ("staggered", "bursty") else 0.0
     r = run_timed_workload(engine, cfg.vocab_size, requests=args.requests,
                            prompt_budget=args.prompt_len,
                            new_tokens=args.new_tokens, stagger_s=stagger,
                            priority_mix=args.priority_mix,
-                           shared_prefix=args.shared_prefix)
+                           shared_prefix=args.shared_prefix,
+                           arrival_mode="bursty"
+                           if args.workload == "bursty" else "uniform")
     print(f"arch={cfg.name} quant={args.quant} backend={args.quant_backend} "
           f"cache={args.cache_mode} workload={args.workload} "
           f"requests={args.requests} slots={args.batch}")
@@ -113,8 +130,16 @@ def run_requests(args, cfg, engine):
           f"({r['tok_per_s']:.1f} tok/s)")
     print(f"  request latency p50={r['req_p50_ms']:.0f}ms "
           f"p99={r['req_p99_ms']:.0f}ms   "
-          f"ttft p50={r['ttft_p50_ms']:.0f}ms")
+          f"ttft p50={r['ttft_p50_ms']:.0f}ms "
+          f"p99={r['ttft_p99_ms']:.0f}ms   "
+          f"itl p50={r['itl_p50_ms']:.1f}ms p99={r['itl_p99_ms']:.1f}ms")
     print(f"  cache HBM/request: {r['cache_kb_per_req']:.1f} KiB")
+    if args.spec_decode:
+        print(f"  spec decode: k={args.spec_k} "
+              f"draft={args.spec_quant or args.quant} "
+              f"acceptance={r['acceptance_rate']:.0%} "
+              f"tokens/step={r['tokens_per_step']:.2f} "
+              f"rollback_pages={r['spec_rollback_pages']}")
     if args.cache_mode == "paged":
         print(f"  pool: {r['pool_pages']} pages, mean occupancy "
               f"{r['occupancy']:.0%}, mean concurrency "
@@ -142,13 +167,16 @@ def main(argv=None):
     ap.add_argument("--decode-chunk", type=int, default=8,
                     help="tokens per jitted decode dispatch")
     ap.add_argument("--workload", default="batch",
-                    choices=["batch", "uniform", "staggered"],
-                    help="batch = lockstep generate; uniform/staggered = "
-                         "request queue with slot refill")
+                    choices=["batch", "uniform", "staggered", "bursty"],
+                    help="batch = lockstep generate; uniform/staggered/"
+                         "bursty = request queue with slot refill "
+                         "(bursty clusters Poisson-burst arrivals with "
+                         "Pareto heavy-tail prompt lengths)")
     ap.add_argument("--requests", type=int, default=8,
-                    help="request count for uniform/staggered workloads")
+                    help="request count for queued workloads")
     ap.add_argument("--stagger-ms", type=float, default=50.0,
-                    help="arrival spacing for the staggered workload")
+                    help="arrival spacing for the staggered workload; "
+                         "mean inter-arrival for bursty")
     ap.add_argument("--quant", default="dense",
                     choices=["dense", "w8a8_nibble", "w4a8_nibble", "lut"])
     ap.add_argument("--quant-backend", default="xla",
@@ -187,6 +215,20 @@ def main(argv=None):
     ap.add_argument("--priority-aging-s", type=float, default=1.0,
                     help="queue-wait seconds per +1 effective priority "
                          "(anti-starvation aging; 0 = strict priorities)")
+    ap.add_argument("--spec-decode", action="store_true",
+                    help="self-speculative decoding: the quantized "
+                         "program drafts --spec-k tokens per slot, one "
+                         "dense multi-token forward verifies them; "
+                         "rejected tails roll back as a page-table "
+                         "truncation.  Greedy streams stay bit-equal "
+                         "to the non-spec dense engine")
+    ap.add_argument("--spec-k", type=int, default=4,
+                    help="draft tokens per speculation round")
+    ap.add_argument("--spec-quant", default=None,
+                    choices=["dense", "qat", "w8a8_nibble", "w4a8_nibble",
+                             "lut"],
+                    help="draft-side quant mode (default: the engine's "
+                         "--quant; the verifier always runs dense)")
     args = ap.parse_args(argv)
 
     cfg, _, engine = _build(args)

@@ -55,20 +55,36 @@ def scatter_cache_rows(buf, new, index):
     ``index`` is either a scalar (every sequence writes at the same
     offset — the classic lockstep decode) or a ``(B,)`` int32 vector of
     per-slot offsets (continuous batching: each slot is an independent
-    sequence at its own position).  The vector case is a vmapped
-    ``dynamic_update_slice`` over the batch axis, so the compiled
-    program is shape-identical for every position assignment.
+    sequence at its own position).  The single-row vector case is a
+    vmapped ``dynamic_update_slice`` over the batch axis, so the
+    compiled program is shape-identical for every position assignment.
+
+    Multi-row vector writes (S_new > 1 — the speculative-decode verify
+    forward scatters ``k+1`` rows per slot at once) use a positional
+    scatter with each row's target clipped to the last slab row:
+    ``dynamic_update_slice`` would *shift the whole window down* when
+    ``index > L - S_new``, corrupting live rows below the write
+    position, whereas clipping collapses only the overflowing rows onto
+    row ``L - 1`` — a row no query ever attends before its owner
+    rewrites it (the idempotent-write invariant; the engine never lets
+    a request's *accepted* stream write past the slab).
     """
     new = new.astype(buf.dtype)
     index = jnp.asarray(index)
     if index.ndim == 0:
         start = (0, index) + (0,) * (buf.ndim - 2)
         return jax.lax.dynamic_update_slice(buf, new, start)
+    if new.shape[1] == 1:
+        def one(b, n, i):
+            return jax.lax.dynamic_update_slice(
+                b, n, (i,) + (0,) * (b.ndim - 1))
 
-    def one(b, n, i):
-        return jax.lax.dynamic_update_slice(b, n, (i,) + (0,) * (b.ndim - 1))
-
-    return jax.vmap(one)(buf, new, index)
+        return jax.vmap(one)(buf, new, index)
+    b, s = new.shape[:2]
+    pos = jnp.clip(index[:, None].astype(jnp.int32)
+                   + jnp.arange(s, dtype=jnp.int32)[None, :],
+                   0, buf.shape[1] - 1)
+    return buf.at[jnp.arange(b)[:, None], pos].set(new)
 
 
 # ---------------------------------------------------------------------------
@@ -82,24 +98,35 @@ def scatter_cache_rows(buf, new, index):
 # slot refill and page recycling never recompile.
 
 def scatter_paged_rows(pool, new, table, index):
-    """Write one decode row per slot through the page table.
+    """Write decode rows per slot through the page table.
 
-    ``pool``: (num_pages, page_size, ...); ``new``: (B, 1, ...);
-    ``table``: (B, max_pages) int32; ``index``: scalar or (B,) position.
-    Row ``index[b]`` of slot ``b`` lands at pool position
-    ``(table[b, index[b] // page_size], index[b] % page_size)``.
-    Distinct live slots own distinct pages, so the scatter never
-    collides; idle slots' table rows all point at the trash page, where
-    their frozen idempotent rewrites are harmless.
+    ``pool``: (num_pages, page_size, ...); ``new``: (B, S, ...);
+    ``table``: (B, max_pages) int32; ``index``: scalar or (B,) start
+    position.  Row ``index[b] + j`` of slot ``b`` lands at pool position
+    ``(table[b, pos // page_size], pos % page_size)``.  Distinct live
+    slots own distinct pages, so the scatter never collides; idle
+    slots' table rows all point at the trash page, where their frozen
+    idempotent rewrites are harmless.
+
+    The multi-row case (S > 1 — the speculative-decode verify forward
+    writes ``k+1`` rows per slot in one dispatch) clips each row's
+    logical position to the table's addressable range, so overflowing
+    rows collapse onto logical row ``max_len - 1`` — resolved through
+    the row's last table entry to either the trash page (unbooked tail)
+    or the slot's final row, which no query attends before its owner's
+    final write rewrites it (the idempotent-write invariant).
     """
-    if new.shape[1] != 1:
-        raise ValueError(f"paged scatter writes one row per slot, got "
-                         f"S={new.shape[1]}")
     ps = pool.shape[1]
-    b = new.shape[0]
+    b, s = new.shape[:2]
     index = jnp.broadcast_to(jnp.asarray(index, jnp.int32).reshape(-1), (b,))
-    page = jnp.take_along_axis(table, (index // ps)[:, None], axis=1)[:, 0]
-    return pool.at[page, index % ps].set(new[:, 0].astype(pool.dtype))
+    if s == 1:
+        page = jnp.take_along_axis(table, (index // ps)[:, None],
+                                   axis=1)[:, 0]
+        return pool.at[page, index % ps].set(new[:, 0].astype(pool.dtype))
+    pos = jnp.clip(index[:, None] + jnp.arange(s, dtype=jnp.int32)[None, :],
+                   0, table.shape[1] * ps - 1)
+    page = jnp.take_along_axis(table, pos // ps, axis=1)
+    return pool.at[page, pos % ps].set(new.astype(pool.dtype))
 
 
 def gather_pages(pool, table):

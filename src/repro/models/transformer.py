@@ -608,15 +608,25 @@ def copy_paged_cache_page(caches, src, dst):
 
 def decode_step(params, cfg: ModelConfig, token, caches, index, *,
                 enc_out=None, page_table=None):
-    """One decode step.  token: (B, 1) int32.
+    """One decode step.  token: (B, S) int32 (classically S == 1).
 
-    ``index`` is the cache write position — a scalar (every sequence at
-    the same position, the lockstep special case) or a ``(B,)`` int32
-    vector of *per-slot* positions (continuous batching: each batch slot
-    is an independent sequence).  Positions are data, not shape: both
-    forms compile once and serve every position assignment.  Attention
-    caches scatter per slot; mamba layers carry per-sequence recurrent
-    state and never index by position, so their semantics are unchanged.
+    ``index`` is the cache write position of ``token[:, 0]`` — a scalar
+    (every sequence at the same position, the lockstep special case) or
+    a ``(B,)`` int32 vector of *per-slot* positions (continuous
+    batching: each batch slot is an independent sequence).  Positions
+    are data, not shape: both forms compile once and serve every
+    position assignment.  Attention caches scatter per slot; mamba
+    layers carry per-sequence recurrent state and never index by
+    position, so their semantics are unchanged.
+
+    With ``S > 1`` the step evaluates ``S`` consecutive tokens per slot
+    in one forward — row ``j`` writes cache position ``index + j`` and
+    attends everything at or below it (per-position causal masking) —
+    which is the speculative-decode *verify* shape: all ``k`` draft
+    positions plus the bonus position get their next-token logits in a
+    single batched dense dispatch.  S > 1 requires attention-only
+    stacks (a mamba mixer would need ``S`` recurrent sub-steps; the
+    serve engine rejects spec decode on mamba models up front).
 
     With ``page_table`` (a ``(B, max_pages)`` int32 table), ``caches``
     are shared page pools: the scatter routes through the table
@@ -626,9 +636,10 @@ def decode_step(params, cfg: ModelConfig, token, caches, index, *,
     """
     x = embed_apply(params["embed"], token,
                     scale_by_sqrt_dim=cfg.emb_scale_by_sqrt_dim)
-    b = x.shape[0]
+    b, s = x.shape[0], token.shape[1]
     index = jnp.asarray(index, jnp.int32)
-    pos = jnp.broadcast_to(index.reshape(-1, 1), (b, 1))
+    pos = (jnp.broadcast_to(index.reshape(-1, 1), (b, 1))
+           + jnp.arange(s, dtype=jnp.int32)[None, :])
     x, new_caches, _ = _stack_apply(params["stack"], cfg, x, positions=pos,
                                     caches=caches, cache_index=index,
                                     enc_out=enc_out, mode="decode",

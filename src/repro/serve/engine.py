@@ -77,18 +77,46 @@ program.  Concretely:
   ``decode_chunk`` tokens inside a single ``jax.jit`` — one dispatch
   per chunk, not per token.
 * **Sampling.**  Every generated token, including the first one after
-  prefill, goes through the same temperature/greedy path.
+  prefill, goes through the same temperature/greedy path.  The rng for
+  stream index ``i`` of request ``r`` is *index-derived* —
+  ``fold_in(fold_in(base_key, r.id), i)`` — never a split chain
+  threaded through the decode loop, so a draw depends only on (request,
+  position), not on batch composition, admission order, or how many
+  chunks ran before it.  Sampled streams are therefore bit-stable under
+  preemption and resume, exactly like greedy ones.
+* **Self-speculative decoding.**  With ``spec_decode=True`` the
+  *quantized* execution mode of the same weights drafts ``spec_k``
+  tokens per slot (a ``lax.scan`` under the draft config), and ONE
+  dense multi-token ``decode_step`` forward verifies all draft
+  positions at once (the multi-position machinery above, at
+  ``S = spec_k + 1``) — the paper's logic-reuse pairing: the low-power
+  nibble datapath proposes, the full-precision datapath it was carved
+  from disposes.  Greedy acceptance is exact-match, so a spec stream is
+  bit-identical to the non-spec dense stream; at temperature > 0
+  rejection sampling preserves the dense distribution.  Rejected draft
+  tails roll back as a **page-table operation** — ``PageTable.truncate``
+  re-points the dead tail at the trash page and the allocator takes the
+  pages back; no cache rows are copied (the dense verify already
+  overwrote the draft's rows, and junk rows past the accepted prefix
+  are never attended before their owner rewrites them).  The engine
+  compiles exactly one draft and one verify program (``compile_counts``
+  keeps ``{"prefill": 1, "draft": 1, "verify": 1}``; the plain decode
+  chunk is never built in spec mode).
 
 Limits (tracked in ROADMAP "Open items"): models with mamba mixers
 prefill at exact prompt length (end-padding would pollute the SSM
-state), which recompiles per distinct prompt length; resume-after-
+state), which recompiles per distinct prompt length, and cannot draft
+multi-token speculative rounds (conv/SSM state rollback is not a
+page-table operation), so ``spec_decode`` rejects them; resume-after-
 preemption replays the generated tokens through the decode chunk, so a
 preempted request re-pays its generated length in decode steps (a
-page-level swap-out would avoid that) and *temperature* streams resume
-with a fresh rng path (token history is preserved, later draws are
-not bit-stable — greedy streams are); and prompts longer than one
-chunk still prefill in a single dispatch (no chunked prefill), so a
-very long prompt can stall running slots for one prefill's latency.
+page-level swap-out would avoid that); spec streams at temperature > 0
+are distribution-preserving but not bit-stable across preemption (the
+draft model's cache after resume differs from the uninterrupted run's,
+which can shift acceptance boundaries — greedy spec streams stay
+bit-identical); and prompts longer than one chunk still prefill in a
+single dispatch (no chunked prefill), so a very long prompt can stall
+running slots for one prefill's latency.
 
 ``make_serve_step`` remains the single-token jit-able step the decode
 dry-run cells lower.
@@ -105,7 +133,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.configs.base import ModelConfig
+from repro.configs.base import ModelConfig, spec_split
 from repro.models import (
     copy_paged_cache_page,
     decode_step,
@@ -174,6 +202,21 @@ class ServeConfig:
     cache_mode: str | None = None
     page_size: int | None = None
     num_pages: int | None = None
+    spec_decode: bool = False         # self-speculative decoding: the
+    #   quantized (nibble) program drafts ``spec_k`` tokens per slot,
+    #   then ONE multi-token dense forward verifies all draft positions
+    #   at once.  Greedy acceptance keeps the emitted stream bit-equal
+    #   to the non-spec dense engine's; temperature > 0 switches to
+    #   rejection sampling (distribution-preserving, not bit-matching).
+    #   Rejected drafts roll back as a page-table truncation — never a
+    #   cache copy.  Incompatible with mamba-mixer models (the verify
+    #   forward needs position-indexed caches, not recurrent state).
+    spec_k: int = 4                   # draft tokens per speculation round
+    spec_quant_mode: str | None = None  # draft-side QuantLinear mode;
+    #   None = the engine's effective quant_mode (the deployment drafts
+    #   for itself).  The verifier always runs dense — in spec mode the
+    #   engine pins its prefill/verify config to quant_mode="dense" and
+    #   the quant knobs configure the *draft* program only.
 
 
 @dataclasses.dataclass
@@ -187,6 +230,10 @@ class Request:
     tokens: list = dataclasses.field(default_factory=list)  # generated
     t_first: float = -1.0             # time to first token (from run t0)
     t_done: float = -1.0
+    t_tokens: list = dataclasses.field(default_factory=list)  # per-token
+    #   emission times (from run t0; replayed tokens keep their original
+    #   stamps) — consecutive diffs are the inter-token latencies the
+    #   workload driver aggregates into ITL percentiles
     cache_rows: int = 0               # peak cache rows reserved for this
     #   request: max_len in dense mode, pages × page_size in paged mode
     #   (the per-request HBM footprint the benchmark reports)
@@ -333,6 +380,42 @@ def _sampler(scfg: ServeConfig) -> Callable:
     return sample
 
 
+def _slot_sampler(scfg: ServeConfig) -> Callable:
+    """(B, V) logits + (B, 2) per-slot uint32 keys → (B,) int32 token.
+
+    The per-slot keys are the index-derived stream keys (see
+    ``Engine._slot_keys``): slot ``b``'s draw for stream index ``i``
+    uses ``fold_in(request_key, i)``, so the draw depends only on the
+    request identity and the token's position in its stream — never on
+    admission order, batch composition or preemption history.  That is
+    what makes *sampled* streams bit-stable under evict-and-resume."""
+    def sample(logits, keys):
+        logits = logits.astype(jnp.float32)
+        if scfg.temperature > 0.0:
+            nxt = jax.vmap(jax.random.categorical)(
+                keys, logits / scfg.temperature)
+        else:
+            nxt = jnp.argmax(logits, axis=-1)
+        return nxt.astype(jnp.int32)
+
+    return sample
+
+
+def _fold_counts(keys, counts):
+    """Per-slot stream-index keys: ``fold_in(keys[b], counts[b])``."""
+    return jax.vmap(jax.random.fold_in)(keys, counts)
+
+
+# Sub-draw tags folded *below* the stream-index key when one token index
+# needs several independent draws (speculative decoding): the chunk
+# sampler's draw for index i is fold_in(req_key, i); the spec path's
+# draft proposal, acceptance uniform and rejection resample for the same
+# index fold one more tag in, so no draw ever aliases another.
+_TAG_ACCEPT = 1
+_TAG_RESAMPLE = 2
+_TAG_DRAFT = 3
+
+
 def make_serve_step(cfg: ModelConfig, scfg: ServeConfig) -> Callable:
     """serve_step(params, caches, token, index, rng) → (next_token, caches).
 
@@ -421,13 +504,40 @@ class Engine:
                                  "attended dequantized while a solo "
                                  "prefill attends full precision, "
                                  "breaking the bit-match contract")
+        self._spec = scfg.spec_decode
+        self._draft_cfg = None
+        if self._spec:
+            if scfg.spec_k < 1:
+                raise ValueError(f"spec_k must be >= 1, got {scfg.spec_k}")
+            if self._has_mamba:
+                raise ValueError(
+                    "spec_decode=True is incompatible with mamba-mixer "
+                    "models: the multi-token verify forward needs "
+                    "position-indexed caches, and the recurrent state "
+                    "cannot roll back a rejected draft")
+            # the quantized deployment drafts for its own dense
+            # verifier: the engine's effective quant knobs configure the
+            # DRAFT program, while prefill + verify run pinned dense
+            # (acceptance is defined against the dense model's output)
+            self._draft_cfg, self.cfg = spec_split(self.cfg,
+                                                   scfg.spec_quant_mode)
         # the cache slab/pool is donated: both stages rebind it from the
         # return value, so the update happens in place instead of
         # copying every unmodified row
         self._prefill_fn = _CountingJit(self._build_prefill(),
                                         donate_argnums=1)
-        self._chunk_fn = _CountingJit(self._build_decode_chunk(),
-                                      donate_argnums=1)
+        if self._spec:
+            # exactly two decode-side programs — one quantized draft,
+            # one dense verify; _chunk_fn is never built or called, so
+            # its pinned compile count is 0 (see ``compile_counts``)
+            self._chunk_fn = None
+            self._draft_fn = _CountingJit(self._build_draft(),
+                                          donate_argnums=1)
+            self._verify_fn = _CountingJit(self._build_verify(),
+                                           donate_argnums=1)
+        else:
+            self._chunk_fn = _CountingJit(self._build_decode_chunk(),
+                                          donate_argnums=1)
         self._caches = init_caches(self.cfg, scfg.batch, scfg.max_len)
         self._next_id = 0
         self.reset()
@@ -502,12 +612,12 @@ class Engine:
 
     def _build_decode_chunk(self):
         cfg, scfg = self.cfg, self.scfg
-        sample = _sampler(scfg)
+        sample = _slot_sampler(scfg)
         max_pos = scfg.max_len - 1
         paged = self._paged
 
         def chunk(params, caches, token, positions, active, remaining,
-                  table, forced, forced_on, rng):
+                  table, forced, forced_on, keys, counts):
             """Scan ``decode_chunk`` tokens; inactive slots are frozen
             (their rewrites land on already-written rows — or, paged, on
             the trash page) and emit -1.  ``table`` is the (B, max_pages)
@@ -515,17 +625,22 @@ class Engine:
             ``forced_on`` are (decode_chunk, B) teacher-forcing lanes:
             where ``forced_on`` a preempted request's stored token
             replaces the sampled one, replaying its stream verbatim so
-            the rebuilt KV matches an uninterrupted run's."""
+            the rebuilt KV matches an uninterrupted run's.  ``keys`` /
+            ``counts`` are the per-slot request keys and stream indices:
+            step ``t`` of slot ``b`` draws with
+            ``fold_in(keys[b], counts[b] + t)``, so replayed draws are
+            discarded and fresh draws after a resume land on exactly
+            the keys an uninterrupted run would have used — sampled
+            streams are bit-stable under preemption."""
             page_table = table if paged else None
 
             def body(carry, xs):
                 f_tok, f_on = xs
-                caches, token, positions, active, remaining, rng = carry
-                rng, sub = jax.random.split(rng)
+                caches, token, positions, active, remaining, counts = carry
                 logits, caches = decode_step(params, cfg, token, caches,
                                              positions,
                                              page_table=page_table)
-                nxt = sample(logits[:, -1], sub)
+                nxt = sample(logits[:, -1], _fold_counts(keys, counts))
                 nxt = jnp.where(f_on, f_tok, nxt)
                 emitted = jnp.where(active, nxt, -1)
                 remaining = remaining - active.astype(jnp.int32)
@@ -537,15 +652,142 @@ class Engine:
                     active, jnp.minimum(positions + 1, max_pos), positions)
                 token = jnp.where(active[:, None], nxt[:, None], token)
                 carry = (caches, token, positions, new_active, remaining,
-                         rng)
+                         counts + 1)
                 return carry, (emitted, active)
 
-            init = (caches, token, positions, active, remaining, rng)
+            init = (caches, token, positions, active, remaining, counts)
             carry, (toks, valid) = jax.lax.scan(
                 body, init, (forced, forced_on), length=scfg.decode_chunk)
-            return carry + (toks, valid)
+            return carry[:-1] + (toks, valid)
 
         return chunk
+
+    def _build_draft(self):
+        """The quantized draft program: a ``lax.scan`` of ``spec_k``
+        decode steps under the *draft* config (nibble/quantized
+        projections), proposing one token per step per slot.  Returns
+        the drafted tokens and (temperature mode) each draw's full
+        draft distribution — the verifier needs ``q(d)`` for rejection
+        sampling.  Draft K/V writes land on rows the dense verify
+        forward rewrites in the same round, so no quantized row ever
+        survives into the attended history."""
+        cfg, scfg = self._draft_cfg, self.scfg
+        k = scfg.spec_k
+        temp = scfg.temperature
+        max_pos = scfg.max_len - 1
+        paged = self._paged
+
+        def draft(params, caches, token, positions, active, table,
+                  forced, forced_on, keys, counts):
+            """token: (B, 1) last emitted per slot; positions: (B,) its
+            row; forced/forced_on: (spec_k, B) replay lanes (a resumed
+            request's committed tokens are re-proposed verbatim and
+            force-accepted in verify); keys/counts: per-slot stream
+            keys + the stream index of each slot's first draft."""
+            page_table = table if paged else None
+
+            def body(carry, xs):
+                f_tok, f_on = xs
+                caches, token, positions, counts = carry
+                logits, caches = decode_step(params, cfg, token, caches,
+                                             positions,
+                                             page_table=page_table)
+                lg = logits[:, -1].astype(jnp.float32)
+                if temp > 0.0:
+                    probs = jax.nn.softmax(lg / temp, axis=-1)
+                    dkeys = jax.vmap(jax.random.fold_in, (0, None))(
+                        _fold_counts(keys, counts), _TAG_DRAFT)
+                    nxt = jax.vmap(jax.random.categorical)(
+                        dkeys, lg / temp).astype(jnp.int32)
+                else:
+                    # greedy drafts carry no distribution; a width-1
+                    # dummy keeps the verify signature uniform
+                    probs = jnp.zeros((lg.shape[0], 1), jnp.float32)
+                    nxt = jnp.argmax(lg, axis=-1).astype(jnp.int32)
+                nxt = jnp.where(f_on, f_tok, nxt)
+                positions = jnp.where(
+                    active, jnp.minimum(positions + 1, max_pos), positions)
+                token = jnp.where(active[:, None], nxt[:, None], token)
+                return (caches, token, positions, counts + 1), (nxt, probs)
+
+            init = (caches, token, positions, counts)
+            (caches, _, _, _), (drafts, dprobs) = jax.lax.scan(
+                body, init, (forced, forced_on), length=k)
+            return caches, drafts, dprobs     # (k, B), (k, B, V or 1)
+
+        return draft
+
+    def _build_verify(self):
+        """The dense verify program: ONE multi-token forward evaluates
+        the last emitted token plus all ``spec_k`` drafts per slot
+        (``decode_step`` with S = k+1 — the same multi-position
+        machinery the prefill path uses, not a third program shape per
+        request mix), rewriting rows ``start .. start+k`` with dense
+        K/V and returning, per slot, the emission candidates and the
+        per-draft acceptance mask.
+
+        Greedy: draft j is accepted iff it equals the dense argmax at
+        its position, so every accepted token — and the correction
+        token emitted at the first mismatch — is *exactly* the token
+        the non-spec dense engine would have produced (bit-match by
+        construction).  Temperature > 0: standard rejection sampling —
+        accept draft ``d`` with probability ``min(1, p(d)/q(d))``,
+        resample rejections from ``normalize(max(p - q, 0))``, and draw
+        a bonus token from the dense distribution when every draft
+        survives; the emitted stream is distributed exactly as the
+        dense model's.  All draws are index-derived (stream keys +
+        tags), never split-chained.  Replayed (forced) drafts are
+        force-accepted: they are committed history, not proposals."""
+        cfg, scfg = self.cfg, self.scfg
+        k = scfg.spec_k
+        temp = scfg.temperature
+        paged = self._paged
+
+        def verify(params, caches, token, drafts, start, table,
+                   forced_on, dprobs, keys, counts):
+            """token: (B, 1); drafts: (k, B) from the draft program;
+            start: (B,) row of ``token``; forced_on: (k, B);
+            dprobs: (k, B, V) draft distributions ((k, B, 1) dummy in
+            greedy mode); counts: stream index of ``drafts[0]``."""
+            page_table = table if paged else None
+            tokens = jnp.concatenate([token, drafts.T], axis=1)  # (B,k+1)
+            logits, caches = decode_step(params, cfg, tokens, caches,
+                                         start, page_table=page_table)
+            lg = logits.astype(jnp.float32)                   # (B,k+1,V)
+            d = tokens[:, 1:]                                 # (B, k)
+            f_on = forced_on.T                                # (B, k)
+            if temp > 0.0:
+                p = jax.nn.softmax(lg / temp, axis=-1)
+                q = jnp.moveaxis(dprobs, 0, 1)                # (B, k, V)
+                pd = jnp.take_along_axis(p[:, :-1], d[..., None],
+                                         axis=-1)[..., 0]
+                qd = jnp.take_along_axis(q, d[..., None], axis=-1)[..., 0]
+                idx = counts[:, None] + jnp.arange(k)[None, :]
+                step_keys = jax.vmap(lambda key, ii: jax.vmap(
+                    lambda i: jax.random.fold_in(key, i))(ii))(keys, idx)
+                u = jax.vmap(jax.vmap(lambda sk: jax.random.uniform(
+                    jax.random.fold_in(sk, _TAG_ACCEPT), ())))(step_keys)
+                accept = f_on | (u * qd <= pd)
+                resid = jnp.maximum(p[:, :-1] - q, 0.0)
+                rs = jnp.sum(resid, axis=-1, keepdims=True)
+                resid = jnp.where(rs > 0, resid / rs, p[:, :-1])
+                corr = jax.vmap(jax.vmap(
+                    lambda sk, pr: jax.random.categorical(
+                        jax.random.fold_in(sk, _TAG_RESAMPLE),
+                        jnp.log(pr + 1e-30))))(step_keys, resid)
+                bonus = jax.vmap(jax.random.categorical)(
+                    _fold_counts(keys, counts + k), lg[:, -1] / temp)
+                out = jnp.concatenate(
+                    [jnp.where(accept, d, corr.astype(jnp.int32)),
+                     bonus.astype(jnp.int32)[:, None]], axis=1)
+            else:
+                g = jnp.argmax(lg, axis=-1).astype(jnp.int32)  # (B,k+1)
+                accept = f_on | (d == g[:, :-1])
+                out = jnp.concatenate([jnp.where(f_on, d, g[:, :-1]),
+                                       g[:, -1:]], axis=1)
+            return caches, out, accept
+
+        return verify
 
     # ------------------------------------------------------------------
     # host-side state
@@ -557,7 +799,15 @@ class Engine:
         ``p`` before any query can attend to it, and recycled pages are
         re-filled by their next owner's prefill)."""
         b = self.scfg.batch
-        self._rng = rng if rng is not None else jax.random.PRNGKey(0)
+        # index-derived RNG: one base key per run; request r's stream
+        # key is fold_in(base, r.id) and every draw folds in the token's
+        # stream index (plus a tag for spec sub-draws).  No split chain
+        # to advance means no draw can shift with admission order,
+        # batch composition or preemption — sampled streams are
+        # bit-stable under evict-and-resume.
+        self._base_key = rng if rng is not None else jax.random.PRNGKey(0)
+        self._req_keys: dict[int, np.ndarray] = {}
+        self._slot_keys = np.zeros((b, 2), np.uint32)
         self._queue = _PriorityQueue(self.scfg.priority_aging_s)
         self._slots: list[Request | None] = [None] * b
         self._token = np.zeros((b, 1), np.int32)
@@ -572,6 +822,18 @@ class Engine:
         self._stat_samples = 0
         self._stat_running = 0
         self._stat_in_use = 0
+        # speculative-decoding accounting (zero when spec_decode off):
+        # proposed/accepted count *fresh* drafts only (replayed forced
+        # tokens are committed history, force-accepted by contract, and
+        # would inflate the acceptance rate), and only up to each
+        # round's emission clamp (EOS / remaining budget) — positions a
+        # round could never emit are not proposals.
+        self.spec_rounds = 0
+        self.spec_slot_rounds = 0
+        self.spec_tokens = 0
+        self.spec_proposed = 0
+        self.spec_accepted = 0
+        self.spec_rollback_pages = 0
         # prefix-cache accounting: real tokens run through the prefill
         # stage (suffixes only, on a hit) vs prompt tokens served from
         # cached pages — the observable "prefilled only the suffix"
@@ -601,9 +863,23 @@ class Engine:
         is checkable: counts stay at 1 across arbitrary request mixes,
         page recyclings and preemptions (given a fixed ``prefill_len``
         slot budget).  Counted engine-side from distinct abstract call
-        signatures (see ``_CountingJit``) — no jax-private probe."""
-        return {"prefill": self._prefill_fn.compile_count,
-                "decode_chunk": self._chunk_fn.compile_count}
+        signatures (see ``_CountingJit``) — no jax-private probe.
+
+        The pinned contract: a non-spec engine runs exactly
+        ``{"prefill": 1, "decode_chunk": 1}`` once warm.  A spec engine
+        replaces the chunk with the draft-side pair and runs exactly
+        ``{"prefill": 1, "decode_chunk": 0, "draft": 1, "verify": 1}``
+        — one quantized draft program, one dense multi-token verify
+        program, and the chunk program never built or called.  Any
+        other value is a recompile bug (``benchmarks/serve_bench.py``
+        raises on deviation)."""
+        counts = {"prefill": self._prefill_fn.compile_count,
+                  "decode_chunk": (self._chunk_fn.compile_count
+                                   if self._chunk_fn is not None else 0)}
+        if self._spec:
+            counts["draft"] = self._draft_fn.compile_count
+            counts["verify"] = self._verify_fn.compile_count
+        return counts
 
     @property
     def stats(self) -> dict:
@@ -630,7 +906,20 @@ class Engine:
                 "prefill_tokens": self.prefill_tokens,
                 "cow_copies": self.cow_copies,
                 "prefix_pages": (len(self.prefix_cache)
-                                 if self.prefix_cache is not None else 0)}
+                                 if self.prefix_cache is not None else 0),
+                # speculative decoding (zeros with spec_decode off):
+                # acceptance_rate = fresh drafts accepted / proposed;
+                # tokens_per_step = tokens emitted per *sequence* per
+                # draft+verify round (per slot-round, so it is
+                # comparable to tools/spec_report's per-sequence
+                # estimator; > 1 means each dense forward emitted more
+                # than one token for that sequence)
+                "spec_rounds": self.spec_rounds,
+                "acceptance_rate": (self.spec_accepted
+                                    / max(1, self.spec_proposed)),
+                "tokens_per_step": (self.spec_tokens
+                                    / max(1, self.spec_slot_rounds)),
+                "spec_rollback_pages": self.spec_rollback_pages}
 
     @property
     def cache_token_bytes(self) -> int:
@@ -916,7 +1205,16 @@ class Engine:
         p_len = int(req.prompt.size)
         resumed = bool(req.tokens)
         self._total_prompt_tokens += p_len
-        self._rng, sub = jax.random.split(self._rng)
+        # index-derived stream key: the same request always gets the
+        # same key, whether fresh or re-admitted after a preemption.
+        # The prefill's first-token draw is stream index 0.
+        key = self._req_keys.get(req.id)
+        if key is None:
+            key = np.asarray(jax.random.fold_in(self._base_key, req.id),
+                             np.uint32)
+            self._req_keys[req.id] = key
+        self._slot_keys[slot] = key
+        sub = jax.random.fold_in(jnp.asarray(key), 0)
         if self.prefix_cache is not None:
             first = self._prefix_place(slot, req, sub)
         else:
@@ -950,6 +1248,7 @@ class Engine:
             tok = int(first)
             req.tokens.append(tok)
             req.t_first = time.perf_counter() - self._t0
+            req.t_tokens.append(req.t_first)
         done = (req.max_new_tokens <= 1
                 or (self.scfg.eos_id >= 0 and tok == self.scfg.eos_id))
         if done:
@@ -964,6 +1263,7 @@ class Engine:
     def _finish(self, req: Request, slot: int | None) -> None:
         req.t_done = time.perf_counter() - self._t0
         self._finished[req.id] = req
+        self._req_keys.pop(req.id, None)
         if slot is not None:
             self._slot_forced[slot] = []
         if self._paged and slot is not None \
@@ -983,12 +1283,18 @@ class Engine:
         writes would cross its allocated page boundary.  When the pool
         is dry, preempt the weakest runner — possibly the needy slot
         itself, which then resumes once pages free up."""
+        # rows a slot may make LIVE this dispatch: decode_chunk steps,
+        # or — spec mode — up to spec_k accepted drafts plus the bonus
+        # token.  Spec writes past the accepted length land on trash
+        # (unbooked table tail) and are rolled back, so booking only
+        # covers acceptable rows.
+        chunk_steps = (self.scfg.spec_k + 1 if self._spec
+                       else self.scfg.decode_chunk)
         for slot in range(self.scfg.batch):
             req = self._slots[slot]
             if req is None or not self._active[slot]:
                 continue
-            steps = min(self.scfg.decode_chunk,
-                        int(self._remaining[slot]))
+            steps = min(chunk_steps, int(self._remaining[slot]))
             need = pages_needed(int(self._positions[slot]) + steps,
                                 self._page_size)
             while need > self.page_table.live_len(slot):
@@ -1033,18 +1339,23 @@ class Engine:
         self._stat_running += sum(r is not None for r in self._slots)
         if self._paged:
             self._stat_in_use += self.allocator.in_use
-        (self._caches, token, positions, active, remaining, self._rng,
+        counts = np.asarray(
+            [len(r.tokens) if r is not None else 0 for r in self._slots],
+            np.int32)
+        (self._caches, token, positions, active, remaining,
          toks, valid) = self._chunk_fn(
             self.params, self._caches, jnp.asarray(self._token),
             jnp.asarray(self._positions), jnp.asarray(self._active),
             jnp.asarray(self._remaining),
             jnp.asarray(self.page_table.asarray()),
-            jnp.asarray(forced), jnp.asarray(forced_on), self._rng)
+            jnp.asarray(forced), jnp.asarray(forced_on),
+            jnp.asarray(self._slot_keys), jnp.asarray(counts))
         self._token = np.array(token)        # copies: host state is mutable
         self._positions = np.array(positions)
         self._active = np.array(active)
         self._remaining = np.array(remaining)
         toks, valid = np.asarray(toks), np.asarray(valid)
+        tnow = time.perf_counter() - self._t0
         for slot, req in enumerate(self._slots):
             if req is None:
                 continue
@@ -1053,12 +1364,134 @@ class Engine:
                     break
                 tok = int(toks[t, slot])
                 req.tokens.append(tok)
+                if len(req.t_tokens) < len(req.tokens):
+                    # replayed tokens keep their original stamps
+                    req.t_tokens.append(tnow)
                 if (len(req.tokens) >= req.max_new_tokens
                         or (self.scfg.eos_id >= 0
                             and tok == self.scfg.eos_id)):
                     self._finish(req, slot)
                     self._slots[slot] = None
                     break
+
+    def _spec_rollback(self, slot: int) -> None:
+        """Roll a slot's rejected draft tail back as a page-table
+        operation: truncate the live prefix to the pages its *accepted*
+        rows need and return the tail pages to the allocator.  No cache
+        row is copied or zeroed — the junk rows in the freed pages are
+        exactly the idempotent writes the trash-page invariant already
+        tolerates, and the truncated table entries point at the trash
+        page so the freed pages' next owner is never aliased.  Only
+        incremental mode books pages past the live prefix mid-stream;
+        reserve-mode bookings are worst-case by contract and stay put.
+
+        Shared prefix pages are unreachable by construction: the keep
+        count covers at least the prompt rows plus one emitted token,
+        which is strictly more pages than the prompt's shared full
+        chunks."""
+        if not self._incremental:
+            return
+        keep = pages_needed(int(self._positions[slot]), self._page_size)
+        removed = self.page_table.truncate(slot, keep)
+        if removed:
+            self.allocator.free(removed)
+            del self._slot_pages[slot][keep:]
+            self.spec_rollback_pages += len(removed)
+
+    def _run_spec_round(self, now: float) -> None:
+        """One speculation round: quantized draft of ``spec_k`` tokens
+        per slot, ONE dense multi-token verify forward over all draft
+        positions, then a host-side walk that emits the accepted prefix
+        (plus the correction or bonus token) and rolls back whatever
+        the round over-wrote.  Greedy rounds emit exactly the stream
+        the non-spec dense engine would."""
+        if self._incremental:
+            self._top_up(now)
+            if not self._active.any():
+                return               # top-up evicted the last runner
+        b = self.scfg.batch
+        k = self.scfg.spec_k
+        forced = np.full((k, b), -1, np.int32)
+        forced_on = np.zeros((k, b), bool)
+        for slot in range(b):
+            buf = self._slot_forced[slot]
+            if buf and self._slots[slot] is not None:
+                n = min(k, len(buf))
+                forced[:n, slot] = buf[:n]
+                forced_on[:n, slot] = True
+                del buf[:n]
+        self._stat_samples += 1
+        self._stat_running += sum(r is not None for r in self._slots)
+        if self._paged:
+            self._stat_in_use += self.allocator.in_use
+        counts = np.asarray(
+            [len(r.tokens) if r is not None else 0 for r in self._slots],
+            np.int32)
+        start = self._positions.copy()
+        keys = jnp.asarray(self._slot_keys)
+        counts_j = jnp.asarray(counts)
+        table = jnp.asarray(self.page_table.asarray())
+        f_on = jnp.asarray(forced_on)
+        token = jnp.asarray(self._token)
+        start_j = jnp.asarray(start)
+        # draft → verify stay device-side: the drafted tokens and their
+        # distributions flow straight into the verify dispatch
+        self._caches, drafts, dprobs = self._draft_fn(
+            self.params, self._caches, token, start_j,
+            jnp.asarray(self._active), table, jnp.asarray(forced), f_on,
+            keys, counts_j)
+        self._caches, out, accept = self._verify_fn(
+            self.params, self._caches, token, drafts, start_j, table,
+            f_on, dprobs, keys, counts_j)
+        out = np.asarray(out)            # (B, k+1) emission candidates
+        accept = np.asarray(accept)      # (B, k) per-draft verdicts
+        self.spec_rounds += 1
+        tnow = time.perf_counter() - self._t0
+        eos = self.scfg.eos_id
+        for slot in range(b):
+            req = self._slots[slot]
+            if req is None or not self._active[slot]:
+                continue
+            self.spec_slot_rounds += 1
+            r = int(self._remaining[slot])
+            e = 0
+            # a replay longer than k spills into the next round: while
+            # committed history remains buffered, the fresh bonus token
+            # must NOT be emitted — it would splice a new token into a
+            # stream the client has already seen
+            more_forced = bool(self._slot_forced[slot])
+            # emission walk: position j emits the accepted draft or the
+            # correction token; the bonus position (j == k) is only
+            # reached when every draft survived.  Positions past the
+            # remaining budget or an EOS are never proposals.
+            for j in range(k + 1):
+                if j == k and more_forced:
+                    break
+                tok = int(out[slot, j])
+                req.tokens.append(tok)
+                if len(req.t_tokens) < len(req.tokens):
+                    # replayed tokens keep their original stamps
+                    req.t_tokens.append(tnow)
+                e += 1
+                r -= 1
+                self.spec_tokens += 1
+                if j < k and not forced_on[j, slot]:
+                    self.spec_proposed += 1
+                    if accept[slot, j]:
+                        self.spec_accepted += 1
+                if (r <= 0 or (eos >= 0 and tok == eos) or j == k
+                        or not accept[slot, j]):
+                    break
+            self._positions[slot] = int(start[slot]) + e
+            self._remaining[slot] = r
+            self._token[slot, 0] = int(req.tokens[-1])
+            if (len(req.tokens) >= req.max_new_tokens
+                    or (eos >= 0 and int(req.tokens[-1]) == eos)):
+                self._finish(req, slot)
+                self._slots[slot] = None
+                self._active[slot] = False
+            elif self._paged:
+                self._spec_rollback(slot)
 
     def run(self) -> dict[int, Request]:
         """Drain the queue: admit → chunked decode → refill, until every
@@ -1104,7 +1537,11 @@ class Engine:
                         f"arrived request(s) cannot be admitted with "
                         f"all slots idle{detail}")
                 break
-            self._run_chunk(time.perf_counter() - self._t0)
+            now = time.perf_counter() - self._t0
+            if self._spec:
+                self._run_spec_round(now)
+            else:
+                self._run_chunk(now)
         out, self._finished = self._finished, {}
         return out
 

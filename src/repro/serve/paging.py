@@ -274,6 +274,31 @@ class PageTable:
         self.table[slot, n:n + pages.size] = pages
         self._live_len[slot] = n + pages.size
 
+    def truncate(self, slot: int, n_pages: int) -> list[int]:
+        """Shrink slot ``slot``'s live prefix to its first ``n_pages``
+        pages, re-pointing the removed tail entries at the trash page,
+        and return the removed page ids (position order preserved).
+
+        This is the speculative-decode rollback primitive: rejected
+        draft tokens past the accepted length only ever touched rows in
+        the slot's *tail* pages, so un-mapping those pages (and letting
+        the caller return them to the allocator) rolls the cache back
+        without copying a single row — the rows themselves are junk the
+        idempotent-write invariant already tolerates.  Prefix pages
+        (prompt rows) sit strictly below any rollback target, so shared
+        refcounted pages are never part of the removed tail.  A
+        ``n_pages`` at or above the live length is a no-op."""
+        if n_pages < 0:
+            raise ValueError(f"cannot truncate slot {slot} to {n_pages} "
+                             f"pages")
+        n = int(self._live_len[slot])
+        if n_pages >= n:
+            return []
+        removed = self.table[slot, n_pages:n].tolist()
+        self.table[slot, n_pages:n] = self.trash_page
+        self._live_len[slot] = n_pages
+        return removed
+
     def live_len(self, slot: int) -> int:
         """Live (non-trash) prefix length of a slot's row."""
         return int(self._live_len[slot])

@@ -24,6 +24,17 @@ definitions cannot drift apart:
   engine's ``prefix_hit_rate`` (prompt tokens served from cached pages)
   and ``prefill_tokens`` (tokens actually run through prefill) ride
   along in the stats so the cache's effect is measurable;
+* ``arrival_mode="bursty"`` replaces the even ``stagger_s`` spacing
+  with a Poisson-burst process (exponential inter-burst gaps at the
+  same mean load, geometric burst sizes, simultaneous arrivals inside
+  a burst) and draws prompt lengths from a clipped Pareto heavy tail
+  instead of the uniform band — the tail-latency stressor the p99
+  TTFT/ITL columns exist for (bursts queue behind full slots; one
+  Pareto-tail prompt monopolises a prefill);
+* ITL (inter-token latency) percentiles come from per-token emission
+  timestamps (``Request.t_tokens``), pooled across requests —
+  speculative decoding moves these: a round emits its accepted run of
+  tokens at one instant, then pays a draft+verify gap;
 * scheduling counters ride along from ``engine.stats``: ``preemptions``
   (evict-and-resume events), ``occupancy`` (mean fraction of pool pages
   in use per decode chunk — the axis incremental allocation raises) and
@@ -46,12 +57,16 @@ def run_timed_workload(engine, vocab_size: int, *, requests: int,
                        prompt_budget: int, new_tokens: int,
                        stagger_s: float = 0.0, seed: int = 0,
                        priority_mix: float = 0.0,
-                       shared_prefix: float = 0.0) -> dict:
-    """Submit ``requests`` random prompts (lengths in
-    [prompt_budget/2, prompt_budget], arrivals spaced ``stagger_s``
-    apart), drain the engine, and return throughput/latency stats.
-    ``shared_prefix`` requests begin with one fixed system-prompt head
-    of ``prompt_budget // 2`` tokens."""
+                       shared_prefix: float = 0.0,
+                       arrival_mode: str = "uniform") -> dict:
+    """Submit ``requests`` random prompts and drain the engine; returns
+    throughput/latency stats.  ``arrival_mode="uniform"`` spaces
+    arrivals ``stagger_s`` apart with lengths uniform in
+    [prompt_budget/2, prompt_budget]; ``"bursty"`` keeps the same mean
+    offered load but clusters arrivals into Poisson bursts and draws
+    lengths from a clipped Pareto(1.5) heavy tail.  ``shared_prefix``
+    requests begin with one fixed system-prompt head of
+    ``prompt_budget // 2`` tokens."""
     # validate up front: requests == 0 crashes the percentile math below
     # and prompt_budget < 2 turns the rng.integers bounds inside out
     # (low = max(2, budget // 2) would exceed high = budget + 1)
@@ -69,9 +84,34 @@ def run_timed_workload(engine, vocab_size: int, *, requests: int,
     if not 0.0 <= shared_prefix <= 1.0:
         raise ValueError(f"shared_prefix must be in [0, 1], got "
                          f"{shared_prefix}")
+    if arrival_mode not in ("uniform", "bursty"):
+        raise ValueError(f"arrival_mode must be 'uniform' or 'bursty', "
+                         f"got {arrival_mode!r}")
     rng = np.random.default_rng(seed)
-    lens = rng.integers(max(2, prompt_budget // 2), prompt_budget + 1,
-                        requests)
+    if arrival_mode == "uniform":
+        lens = rng.integers(max(2, prompt_budget // 2), prompt_budget + 1,
+                            requests)
+        arrivals = np.arange(requests) * stagger_s
+    else:
+        # heavy-tail lengths: Pareto(1.5) scaled so the typical prompt
+        # sits near prompt_budget/2 but a fat tail pins the budget cap
+        lens = np.clip(
+            (2 + rng.pareto(1.5, requests) * (prompt_budget // 4))
+            .astype(np.int64), 2, prompt_budget)
+        # Poisson bursts at the same mean load as uniform spacing:
+        # burst sizes ~ geometric (mean _BURST_MEAN, simultaneous
+        # arrivals inside a burst), exponential inter-burst gaps with
+        # mean burst_size × stagger_s
+        _BURST_MEAN = 3
+        arrivals = np.zeros(requests)
+        t, i = 0.0, 0
+        while i < requests:
+            size = min(int(rng.geometric(1.0 / _BURST_MEAN)),
+                       requests - i)
+            arrivals[i:i + size] = t
+            i += size
+            t += rng.exponential(_BURST_MEAN * stagger_s) \
+                if stagger_s > 0 else 0.0
     prios = (rng.random(requests) < priority_mix).astype(np.int32)
     shared = rng.random(requests) < shared_prefix
     sys_prompt = rng.integers(0, vocab_size, prompt_budget // 2)
@@ -96,7 +136,8 @@ def run_timed_workload(engine, vocab_size: int, *, requests: int,
     #                          run starts from a cold cache
 
     ids = [engine.submit(make_prompt(i), new_tokens,
-                         arrival=i * stagger_s, priority=int(prios[i]))
+                         arrival=float(arrivals[i]),
+                         priority=int(prios[i]))
            for i in range(requests)]
     t0 = time.perf_counter()
     done = engine.run()
@@ -106,18 +147,31 @@ def run_timed_workload(engine, vocab_size: int, *, requests: int,
     lat = np.asarray([done[i].t_done - done[i].arrival for i in ids])
     ttft = np.asarray([done[i].t_first - done[i].arrival for i in ids])
     cache_rows = np.asarray([done[i].cache_rows for i in ids])
+    # inter-token latency: gaps between consecutive emission stamps,
+    # pooled across requests.  A spec round emits its accepted run at
+    # one instant (zero gaps) then pays the draft+verify gap — the ITL
+    # distribution is how that trade shows up.
+    itl = np.concatenate(
+        [np.diff(done[i].t_tokens) for i in ids
+         if len(done[i].t_tokens) >= 2]) \
+        if any(len(done[i].t_tokens) >= 2 for i in ids) \
+        else np.zeros(1)
     stats = engine.stats
     out = {
         "requests": requests,
         "slots": engine.scfg.batch,
         "prompt_budget": prompt_budget,
         "new_tokens": new_tokens,
+        "arrival_mode": arrival_mode,
         "tokens": toks,
         "wall_s": round(wall, 3),
         "tok_per_s": round(toks / wall, 1),
         "req_p50_ms": round(float(np.percentile(lat, 50)) * 1e3, 1),
         "req_p99_ms": round(float(np.percentile(lat, 99)) * 1e3, 1),
         "ttft_p50_ms": round(float(np.percentile(ttft, 50)) * 1e3, 1),
+        "ttft_p99_ms": round(float(np.percentile(ttft, 99)) * 1e3, 1),
+        "itl_p50_ms": round(float(np.percentile(itl, 50)) * 1e3, 2),
+        "itl_p99_ms": round(float(np.percentile(itl, 99)) * 1e3, 2),
         "cache_kb_per_req": round(float(cache_rows.mean())
                                   * engine.cache_token_bytes / 1024.0, 1),
         "preemptions": stats["preemptions"],
@@ -126,6 +180,10 @@ def run_timed_workload(engine, vocab_size: int, *, requests: int,
         "pool_pages": stats["pool_pages"],
         "prefix_hit_rate": round(stats["prefix_hit_rate"], 3),
         "prefill_tokens": stats["prefill_tokens"],
+        "spec": bool(engine.scfg.spec_decode),
+        "acceptance_rate": round(stats["acceptance_rate"], 3),
+        "tokens_per_step": round(stats["tokens_per_step"], 3),
+        "spec_rollback_pages": stats["spec_rollback_pages"],
         "truncated": int(sum(done[i].truncated for i in ids)),
         "compile_s": round(compile_s, 2),
         "compile_counts": engine.compile_counts,

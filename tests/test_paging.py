@@ -126,6 +126,73 @@ def test_page_table_extend_grows_live_prefix():
     assert t.live_len(0) == 0
 
 
+def test_page_table_truncate_returns_tail_and_repoints_trash():
+    t = PageTable(batch=2, max_pages=4, trash_page=0, num_pages=8,
+                  reserved=1)
+    t.assign(0, [2, 3, 4])
+    removed = t.truncate(0, 1)
+    assert removed == [3, 4]               # tail pages, table order
+    np.testing.assert_array_equal(t.row(0), [2, 0, 0, 0])
+    assert t.live_len(0) == 1
+    # the trash entries are dead, not live: extending re-grows from the
+    # truncation point
+    t.extend(0, [5])
+    np.testing.assert_array_equal(t.row(0), [2, 5, 0, 0])
+
+
+def test_page_table_truncate_noop_and_validation():
+    t = PageTable(batch=1, max_pages=3, trash_page=0, num_pages=8,
+                  reserved=1)
+    t.assign(0, [2, 3])
+    assert t.truncate(0, 2) == []          # keep >= live: nothing freed
+    assert t.truncate(0, 5) == []
+    assert t.live_len(0) == 2
+    with pytest.raises(ValueError, match="cannot truncate"):
+        t.truncate(0, -1)
+    assert t.truncate(0, 0) == [2, 3]      # full rollback of the row
+    assert t.live_len(0) == 0
+
+
+def test_truncate_free_cycle_no_leak_no_trash_violation():
+    # rollback protocol: truncate the table, free exactly the removed
+    # ids — the pool must return to balance and the trash page must
+    # never enter the free list
+    a = PageAllocator(8, reserved=1)
+    t = PageTable(batch=1, max_pages=6, trash_page=0, num_pages=8,
+                  reserved=1)
+    pages = a.alloc(5)
+    t.assign(0, pages)
+    removed = t.truncate(0, 2)
+    assert removed == pages[2:]
+    a.free(removed)
+    assert a.in_use == 2 and a.available == 5
+    with pytest.raises(ValueError):        # freed tail cannot double-free
+        a.free(removed[:1])
+    assert 0 not in a.alloc(5)             # trash page still reserved
+
+
+def test_truncate_preserves_refcounted_shared_pages():
+    # a rollback in one slot must never free pages another holder still
+    # shares (prefix-cache pages sit below any rollback target, but the
+    # allocator-level invariant is what guarantees it)
+    a = PageAllocator(8, reserved=1)
+    t = PageTable(batch=2, max_pages=4, trash_page=0, num_pages=8,
+                  reserved=1)
+    shared = a.alloc(1)
+    a.share(shared)                        # second holder
+    priv = a.alloc(2)
+    t.assign(0, shared + priv, shared=set(shared))
+    t.assign(1, shared, shared=set(shared))  # other slot, read-only
+    removed = t.truncate(0, 1)             # roll slot 0 back to shared
+    assert removed == priv
+    a.free(removed)
+    a.free(shared)                         # slot 0's reference
+    assert a.in_use == 1                   # survives for slot 1
+    np.testing.assert_array_equal(t.row(1)[:1], shared)
+    a.free(shared)
+    assert a.in_use == 0
+
+
 # ---------------------------------------------------------------------------
 # Paged decode parity: BIT-identical to the dense slab
 # ---------------------------------------------------------------------------

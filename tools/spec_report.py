@@ -1,0 +1,194 @@
+"""Speculative-decoding planning report: what acceptance buys.
+
+Self-speculative decoding (``ServeConfig.spec_decode``) drafts
+``spec_k`` tokens with the quantized program and verifies them in one
+dense multi-token forward.  Its payoff is governed by a single scalar —
+the per-draft acceptance rate ``alpha`` — through the standard
+geometric-run model: a round emits the accepted draft prefix plus one
+more token (the correction on the first rejection, or the bonus token
+when everything survives), so
+
+    E[tokens/round](alpha, k) = 1 + alpha + ... + alpha^k
+                              = (1 - alpha^(k+1)) / (1 - alpha)
+
+and the per-token speedup over an autoregressive dense engine (one
+dense forward per token) is
+
+    speedup = E[tokens/round] / (k * c_draft + c_verify)
+
+where ``c_draft`` is a draft forward's cost relative to a dense decode
+forward and ``c_verify`` the (k+1)-token verify forward's.  The report
+tabulates both across acceptance rates and ``k``, inverts measured
+``tokens_per_step`` back to an implied acceptance, and — given a
+``BENCH_serve.json`` with spec rows — checks the live engine against
+the model: the measured ``acceptance_rate`` must sit within 10 points
+of the value implied by its own ``tokens_per_step`` (they are coupled
+through the geometric model; a larger gap means the engine is emitting
+tokens the model can't explain, i.e. an accounting bug).
+
+    PYTHONPATH=src python tools/spec_report.py
+    PYTHONPATH=src python tools/spec_report.py \
+        --bench benchmarks/BENCH_serve.json
+    PYTHONPATH=src python tools/spec_report.py --k 4 --alpha 0.8
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+
+__all__ = ["expected_tokens_per_round", "speedup",
+           "acceptance_from_tokens_per_step", "validate_bench"]
+
+
+def expected_tokens_per_round(alpha: float, k: int) -> float:
+    """E[tokens emitted per draft+verify round] for per-draft
+    acceptance ``alpha`` and draft length ``k`` (geometric-run model:
+    accepted prefix + correction/bonus)."""
+    if not 0.0 <= alpha <= 1.0:
+        raise ValueError(f"alpha must be in [0, 1], got {alpha}")
+    if k < 1:
+        raise ValueError(f"k must be >= 1, got {k}")
+    if alpha == 1.0:
+        return float(k + 1)
+    return (1.0 - alpha ** (k + 1)) / (1.0 - alpha)
+
+
+def speedup(alpha: float, k: int, c_draft: float = 0.5,
+            c_verify: float = 1.0) -> float:
+    """Per-token speedup over the autoregressive dense engine.  Costs
+    are relative to one dense single-token decode forward; c_draft is
+    the *quantized* draft forward (< 1 when the nibble path is cheaper,
+    which is the paper's premise), c_verify the one (k+1)-token dense
+    forward (≈ 1 while decode stays memory-bound: the weights are read
+    once either way)."""
+    if c_draft <= 0 or c_verify <= 0:
+        raise ValueError("relative costs must be positive")
+    return expected_tokens_per_round(alpha, k) / (k * c_draft + c_verify)
+
+
+def acceptance_from_tokens_per_step(tps: float, k: int,
+                                    tol: float = 1e-9) -> float:
+    """Invert E[tokens/round] for ``alpha`` by bisection (the map is
+    strictly increasing on [0, 1]).  ``tps`` must lie in
+    [1, k + 1]; the endpoints invert exactly."""
+    if k < 1:
+        raise ValueError(f"k must be >= 1, got {k}")
+    if not 1.0 <= tps <= k + 1:
+        raise ValueError(f"tokens_per_step {tps} outside [1, {k + 1}] "
+                         f"for k={k}")
+    lo, hi = 0.0, 1.0
+    while hi - lo > tol:
+        mid = 0.5 * (lo + hi)
+        if expected_tokens_per_round(mid, k) < tps:
+            lo = mid
+        else:
+            hi = mid
+    return 0.5 * (lo + hi)
+
+
+def report_lines(k_values=(2, 4, 8), alphas=(0.5, 0.6, 0.7, 0.8, 0.9,
+                                             0.95, 0.99),
+                 c_draft: float = 0.5, c_verify: float = 1.0):
+    """The planning table: expected tokens/round and speedup per
+    (acceptance, k)."""
+    yield (f"# speculative-decoding model (c_draft={c_draft}, "
+           f"c_verify={c_verify}; costs relative to one dense decode "
+           f"forward)")
+    yield "alpha," + ",".join(f"tok/step_k{k},speedup_k{k}"
+                              for k in k_values)
+    for a in alphas:
+        cells = []
+        for k in k_values:
+            cells.append(f"{expected_tokens_per_round(a, k):.2f}")
+            cells.append(f"{speedup(a, k, c_draft, c_verify):.2f}")
+        yield f"{a}," + ",".join(cells)
+
+
+def prompt_length_lines(k: int, alpha: float, new_tokens=(16, 64, 256),
+                        prompt_lens=(16, 128, 1024),
+                        c_draft: float = 0.5, c_verify: float = 1.0):
+    """Per-prompt-length view: the draft/verify split is independent of
+    prompt length (decode reads the whole cache either way), but the
+    *round count* a request needs is new_tokens / E[tokens/round] — the
+    dispatch-savings column is what a long generation banks."""
+    e = expected_tokens_per_round(alpha, k)
+    s = speedup(alpha, k, c_draft, c_verify)
+    yield (f"# per-request round counts at alpha={alpha}, k={k} "
+           f"(E[tok/round]={e:.2f}, speedup={s:.2f}x)")
+    yield "prompt_len,new_tokens,dense_forwards,spec_rounds,forwards_saved"
+    for p in prompt_lens:
+        for n in new_tokens:
+            rounds = max(1.0, n / e)
+            # each round = 1 verify forward (+ k cheap draft steps)
+            yield (f"{p},{n},{n},{rounds:.1f},"
+                   f"{n - rounds:.1f}")
+
+
+def validate_bench(path: str, tolerance: float = 0.10):
+    """Check BENCH_serve.json spec rows against the geometric model:
+    measured acceptance_rate vs the acceptance implied by the measured
+    tokens_per_step must agree within ``tolerance`` (10 points by
+    default).  Returns (lines, ok)."""
+    with open(path) as f:
+        payload = json.load(f)
+    rows = [r for r in payload.get("results", [])
+            if r.get("spec") == "on"]
+    lines = [f"# validating {len(rows)} spec row(s) from {path} "
+             f"(tolerance {tolerance:.0%})"]
+    if not rows:
+        lines.append("# no spec rows found — run benchmarks/"
+                     "serve_bench.py first")
+        return lines, False
+    ok = True
+    lines.append("workload,tokens_per_step,measured_acceptance,"
+                 "implied_acceptance,delta,verdict")
+    for r in rows:
+        k = int(r.get("spec_k", 4))
+        tps = float(r["tokens_per_step"])
+        meas = float(r["acceptance_rate"])
+        implied = acceptance_from_tokens_per_step(
+            min(max(tps, 1.0), k + 1), k)
+        delta = abs(meas - implied)
+        good = delta <= tolerance
+        ok = ok and good
+        lines.append(f"{r['workload']},{tps},{meas},{implied:.3f},"
+                     f"{delta:.3f},{'OK' if good else 'DRIFT'}")
+    return lines, ok
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--k", type=int, default=4,
+                    help="draft length for the per-prompt-length table")
+    ap.add_argument("--alpha", type=float, default=0.8,
+                    help="acceptance rate for the per-prompt-length "
+                         "table")
+    ap.add_argument("--c-draft", type=float, default=0.5,
+                    help="draft forward cost relative to a dense decode "
+                         "forward")
+    ap.add_argument("--c-verify", type=float, default=1.0,
+                    help="(k+1)-token verify forward cost relative to a "
+                         "dense decode forward")
+    ap.add_argument("--bench", default=None,
+                    help="BENCH_serve.json to validate spec rows "
+                         "against the model (exit 1 on drift)")
+    args = ap.parse_args(argv)
+    for line in report_lines(c_draft=args.c_draft, c_verify=args.c_verify):
+        print(line)
+    print()
+    for line in prompt_length_lines(args.k, args.alpha,
+                                    c_draft=args.c_draft,
+                                    c_verify=args.c_verify):
+        print(line)
+    if args.bench:
+        print()
+        lines, ok = validate_bench(args.bench)
+        for line in lines:
+            print(line)
+        return 0 if ok else 1
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())
