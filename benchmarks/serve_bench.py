@@ -86,14 +86,14 @@ _HEADER = ("workload,quant,backend,cache,alloc,prefix,spec,pool_pages,"
            "requests,slots,tok_per_s,req_p50_ms,req_p99_ms,ttft_p50_ms,"
            "ttft_p99_ms,itl_p50_ms,itl_p99_ms,cache_kb_per_req,occupancy,"
            "concurrency,preemptions,prefix_hit_rate,acceptance_rate,"
-           "tokens_per_step,compile_s")
+           "tokens_per_step,compile_s,device_count,mesh,dp_replicas")
 
 
 def _bench_one(cfg, params, quant, backend, workload, cache_mode,
                alloc_mode="reserve", num_pages=None, prefix_cache=False,
                shared_prefix=0.0, arrival_mode="uniform", decode_chunk=8,
-               spec=False):
-    from repro.serve import Engine, ServeConfig, run_timed_workload
+               spec=False, tp=1, dp=1):
+    from repro.serve import Engine, Router, ServeConfig, run_timed_workload
     scfg = ServeConfig(batch=SLOTS, max_len=MAX_LEN,
                        prefill_len=PROMPT_BUDGET, decode_chunk=decode_chunk,
                        alloc_mode=alloc_mode, prefix_cache=prefix_cache,
@@ -101,9 +101,13 @@ def _bench_one(cfg, params, quant, backend, workload, cache_mode,
                        cache_mode=cache_mode, page_size=PAGE_SIZE,
                        num_pages=num_pages, spec_decode=spec,
                        spec_k=SPEC_K,
-                       spec_quant_mode=SPEC_DRAFT if spec else None)
-    engine = Engine(cfg, params, scfg)
-    stagger = STAGGER_S if (workload == "staggered"
+                       spec_quant_mode=SPEC_DRAFT if spec else None,
+                       tp=tp)
+    if dp > 1:
+        engine = Router(cfg, params, scfg, replicas=dp)
+    else:
+        engine = Engine(cfg, params, scfg)
+    stagger = STAGGER_S if (workload in ("staggered", "mesh")
                             or arrival_mode == "bursty") else 0.0
     r = run_timed_workload(engine, cfg.vocab_size, requests=REQUESTS,
                            prompt_budget=PROMPT_BUDGET,
@@ -125,6 +129,14 @@ def _bench_one(cfg, params, quant, backend, workload, cache_mode,
     elif counts != expected:
         raise RuntimeError(f"engine recompiled during benchmark: {counts} "
                            f"(expected {expected})")
+    # a paged drain must hand every page back once the prefix index
+    # lets go — a leak in a benchmark run invalidates its numbers
+    if cache_mode == "paged":
+        engine.release_prefix_cache()
+        leaked = engine.leaked_pages()
+        if leaked:
+            raise RuntimeError(f"page leak: {leaked} page(s) still booked "
+                               f"after drain")
     row = {"workload": workload, "quant": quant, "backend": backend,
            "cache": cache_mode, "alloc": alloc_mode if cache_mode == "paged"
            else "-", "prefix": "on" if prefix_cache else "-", **r}
@@ -133,6 +145,7 @@ def _bench_one(cfg, params, quant, backend, workload, cache_mode,
 
 
 def _csv(r):
+    mesh = f"{r['mesh_shape'][0]}x{r['mesh_shape'][1]}"
     return (f"{r['workload']},{r['quant']},{r['backend']},{r['cache']},"
             f"{r['alloc']},{r['prefix']},{r['spec']},"
             f"{r['pool_pages'] or '-'},{r['requests']},"
@@ -141,7 +154,44 @@ def _csv(r):
             f"{r['itl_p50_ms']},{r['itl_p99_ms']},{r['cache_kb_per_req']},"
             f"{r['occupancy']},{r['concurrency']},{r['preemptions']},"
             f"{r['prefix_hit_rate']},{r['acceptance_rate']},"
-            f"{r['tokens_per_step']},{r['compile_s']}")
+            f"{r['tokens_per_step']},{r['compile_s']},"
+            f"{r['device_count']},{mesh},{r['dp_replicas']}")
+
+
+MESH_TRIO = [(1, 1), (2, 1), (1, 2)]          # (tp, dp) per row
+
+
+def _mesh_rows():
+    """The mesh trio itself — runs inside the forced-host child."""
+    from repro.configs import get_config, reduced
+    from repro.models import model_init
+
+    cfg = reduced(get_config(ARCH))
+    params = model_init(jax.random.PRNGKey(0), cfg)
+    rows = []
+    for tp, dp in MESH_TRIO:
+        r, _ = _bench_one(cfg, params, "w8a8_nibble", "xla", "mesh",
+                          "paged", alloc_mode="incremental",
+                          prefix_cache=True, shared_prefix=SHARED_PREFIX,
+                          tp=tp, dp=dp)
+        rows.append(r)
+    return rows
+
+
+def _run_mesh_child(rows):
+    """Spawn this file with --mesh-child under a forced 8-device host
+    platform, merge the child's JSON rows, and yield their CSV lines."""
+    import subprocess
+    env = dict(os.environ,
+               XLA_FLAGS="--xla_force_host_platform_device_count=8")
+    out = subprocess.run(
+        [sys.executable, os.path.abspath(__file__), "--mesh-child"],
+        env=env, capture_output=True, text=True, timeout=1800)
+    if out.returncode:
+        raise RuntimeError(f"mesh child failed:\n{out.stderr[-2000:]}")
+    for r in json.loads(out.stdout.strip().splitlines()[-1]):
+        rows.append(r)
+        yield _csv(r)
 
 
 def run(json_path: str | None = None):
@@ -195,6 +245,14 @@ def run(json_path: str | None = None):
             if warn:
                 yield warn
             yield _csv(r)
+    # mesh trio: the same shared-prefix staggered workload as a
+    # single-device baseline, TP-sharded (one engine over a (1, 2)
+    # mesh), and DP-replicated (two engines behind the router, with
+    # per-replica prefix-affinity hit rates in the JSON row).  Runs in
+    # a child process because the forced-host device count must be set
+    # before jax initializes — the parent already owns a 1-device jax.
+    for line in _run_mesh_child(rows):
+        yield line
     if json_path:
         payload = {
             "note": "Continuous-batching engine throughput on the reduced "
@@ -236,7 +294,20 @@ def run(json_path: str | None = None):
                     "acceptance keeps spec streams bit-identical to the "
                     "baseline's. bursty arrivals cluster Poisson bursts "
                     "with Pareto heavy-tail prompt lengths at the same "
-                    "mean load (ttft_p99_ms / itl percentile columns).",
+                    "mean load (ttft_p99_ms / itl percentile columns). "
+                    "Every row records its topology: device_count, "
+                    "mesh_shape = the per-engine (data, model) mesh, and "
+                    "dp_replicas = engine replicas behind the router "
+                    "(1 / [1, 1] / 1 for plain single-device rows). The "
+                    "workload=mesh trio re-runs the shared-prefix "
+                    "staggered workload on a forced 8-device host "
+                    "platform: a single-device baseline, tp=2 (weights "
+                    "and paged KV pools sharded over the mesh's model "
+                    "axis), and dp=2 (two replicas behind the admission "
+                    "router — its row carries per_replica placement and "
+                    "prefix-affinity hit rates). CPU wall-clock across "
+                    "forced-host shards is a functional proxy, not a "
+                    "speedup claim.",
             "arch": ARCH,
             "results": rows,
         }
@@ -249,7 +320,14 @@ def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--json", default=None,
                     help="also write results to this JSON file")
+    ap.add_argument("--mesh-child", action="store_true",
+                    help="internal: run only the mesh trio and print its "
+                         "rows as JSON (invoked by the parent benchmark "
+                         "under a forced multi-device host platform)")
     args = ap.parse_args()
+    if args.mesh_child:
+        print(json.dumps(_mesh_rows()))
+        return
     for row in run(json_path=args.json):
         print(row)
 

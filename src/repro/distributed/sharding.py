@@ -27,7 +27,7 @@ from jax.sharding import PartitionSpec as P
 from repro.configs.base import ModelConfig
 
 __all__ = ["param_specs", "opt_state_specs", "batch_specs", "cache_specs",
-           "fsdp_axes", "TP_AXIS", "maybe_shard"]
+           "page_table_spec", "fsdp_axes", "TP_AXIS", "maybe_shard"]
 
 TP_AXIS = "model"
 
@@ -231,6 +231,39 @@ def _mla_spec(mesh, stacked: bool, seq_to_dp: bool) -> P:
     return P(*((None,) + spec if stacked else spec))
 
 
+def _paged_kv_spec(cfg: ModelConfig, mesh, stacked: bool) -> P:
+    """(num_pages, page_size, KVH, D-or-1) pool spec.
+
+    KV heads go on the TP axis when they divide it — the attention
+    math is head-parallel, so each shard holds whole heads and the
+    gather/scatter through the page table stays local.  When heads do
+    not divide (GQA models reduced to 1 KV head), fall back to the
+    in-page sequence axis; the page-id axis itself is NEVER sharded —
+    page ids are data, and splitting the pool by page id would turn
+    every host-side allocation decision into a placement decision."""
+    tp_size = mesh.shape[TP_AXIS]
+    if cfg.n_kv_heads % tp_size == 0:
+        spec = (None, None, TP_AXIS, None)
+    else:
+        spec = (None, TP_AXIS, None, None)
+    return P(*((None,) + spec if stacked else spec))
+
+
+def _paged_mla_spec(stacked: bool) -> P:
+    """(num_pages, page_size, rank) latent pool: no head axis exists, so
+    the in-page sequence axis is the only shardable one."""
+    spec = (None, TP_AXIS, None)
+    return P(*((None,) + spec if stacked else spec))
+
+
+def page_table_spec(mesh) -> P:
+    """The (batch, max_pages) page table stays host-authored and fully
+    replicated: every shard walks the same logical table (the pool's
+    sharded axis is heads/rows *within* a page, never the page id)."""
+    del mesh
+    return P(None, None)
+
+
 def _mamba_cache_spec(mesh, leafk: str, stacked: bool) -> P:
     dp = fsdp_axes(mesh)
     if leafk == "conv":                  # (B, W-1, C)
@@ -243,15 +276,22 @@ def _mamba_cache_spec(mesh, leafk: str, stacked: bool) -> P:
 def cache_specs(cfg: ModelConfig, caches: Any, mesh, *,
                 batch: int) -> Any:
     seq_to_dp = batch == 1
+    paged = cfg.cache_mode == "paged"
 
     def rule(path, leaf):
         keys = [k for k in path]
         stacked = "blocks" in keys
         leafk = keys[-1]
         if leafk in ("k", "v", "k_scale", "v_scale"):
-            spec = _kv_spec(cfg, mesh, batch, stacked, seq_to_dp)
+            # paged pools drop the batch axis — (num_pages, page_size,
+            # KVH, D) with int8 scale pools at D=1 — and get their own
+            # head-or-sequence rule; mamba state stays per-slot (B, ...)
+            # even in paged mode, so only the KV/MLA leaves switch
+            spec = (_paged_kv_spec(cfg, mesh, stacked) if paged
+                    else _kv_spec(cfg, mesh, batch, stacked, seq_to_dp))
         elif leafk in ("c_kv", "k_rope"):
-            spec = _mla_spec(mesh, stacked, seq_to_dp)
+            spec = (_paged_mla_spec(stacked) if paged
+                    else _mla_spec(mesh, stacked, seq_to_dp))
         elif leafk in ("conv", "ssm"):
             spec = _mamba_cache_spec(mesh, leafk, stacked)
         else:

@@ -19,10 +19,40 @@ def make_production_mesh(*, multi_pod: bool = False):
     return jax.make_mesh(shape, axes)
 
 
-def make_local_mesh():
-    """Whatever this process has (CPU: 1 device) as a (data, model) mesh."""
-    n = len(jax.devices())
-    return jax.make_mesh((n, 1), ("data", "model"))
+def make_local_mesh(*, dp: int = 0, tp: int = 1, devices=None):
+    """Local ``(data, model)`` mesh over this process's devices.
+
+    ``tp`` sizes the "model" (tensor-parallel) axis; ``dp`` sizes the
+    "data" axis, with ``dp=0`` meaning "all remaining devices"
+    (``len(devices) // tp``).  ``devices`` restricts the mesh to an
+    explicit device list (the serve router hands each engine replica a
+    disjoint slice); default is every device jax sees.  Divisibility is
+    validated up front — GSPMD would reject an uneven mesh anyway, but
+    the error here names the sizes.  The no-argument call keeps the old
+    behaviour: an ``(n, 1)`` data-only mesh.
+    """
+    import numpy as np
+
+    if devices is None:
+        devices = jax.devices()
+    devices = list(devices)
+    n = len(devices)
+    if tp < 1:
+        raise ValueError(f"tp must be >= 1, got {tp}")
+    if dp < 0:
+        raise ValueError(f"dp must be >= 0 (0 = all remaining devices), "
+                         f"got {dp}")
+    if dp == 0:
+        if n % tp:
+            raise ValueError(f"tp={tp} does not divide the {n} available "
+                             f"device(s)")
+        dp = n // tp
+    if dp * tp > n:
+        raise ValueError(f"mesh ({dp}, {tp}) needs {dp * tp} devices but "
+                         f"only {n} are available")
+    grid = np.array(devices[:dp * tp], dtype=object).reshape(dp, tp)
+    from jax.sharding import Mesh
+    return Mesh(grid, ("data", "model"))
 
 
 class HW:

@@ -51,10 +51,28 @@ import jax
 
 from repro.configs import get_config, reduced
 from repro.models import model_init
-from repro.serve import Engine, ServeConfig
+from repro.serve import Engine, Router, ServeConfig
 
 
-def _build(args):
+def _parse_mesh(spec: str | None):
+    """``"DATAxMODEL"`` (e.g. ``2x4``) → per-engine mesh shape tuple."""
+    if spec is None:
+        return None
+    try:
+        dp, tp = spec.lower().split("x")
+        return (int(dp), int(tp))
+    except ValueError:
+        raise SystemExit(f"--mesh expects DATAxMODEL (e.g. 1x2), "
+                         f"got {spec!r}")
+
+
+def _build(args, *, reference: bool = False):
+    """Build the serving stack for ``args``.  ``reference=True`` builds
+    the single-device baseline (tp=1, dp=1, no mesh) from the same
+    argument set — the comparison target for --verify."""
+    tp = 1 if reference else args.tp
+    dp = 1 if reference else args.dp
+    mesh_shape = None if reference else _parse_mesh(args.mesh)
     cfg = reduced(get_config(args.arch)).replace(quant_mode=args.quant)
     params = model_init(jax.random.PRNGKey(0), cfg)
     max_len = args.prompt_len + args.new_tokens
@@ -75,7 +93,11 @@ def _build(args):
                        num_pages=args.num_pages or None,
                        spec_decode=args.spec_decode,
                        spec_k=args.spec_k,
-                       spec_quant_mode=args.spec_quant)
+                       spec_quant_mode=args.spec_quant,
+                       tp=tp,
+                       mesh_shape=mesh_shape)
+    if dp > 1:
+        return cfg, params, Router(cfg, params, scfg, replicas=dp)
     return cfg, params, Engine(cfg, params, scfg)
 
 
@@ -106,24 +128,72 @@ def run_batch(args, cfg, engine):
     print("  sample token ids:", out[0, -16:].tolist())
 
 
+def _run_workload(args, cfg, engine, collect_streams=False):
+    from repro.serve import run_timed_workload
+    stagger = args.stagger_ms / 1000.0 \
+        if args.workload in ("staggered", "bursty") else 0.0
+    return run_timed_workload(engine, cfg.vocab_size,
+                              requests=args.requests,
+                              prompt_budget=args.prompt_len,
+                              new_tokens=args.new_tokens, stagger_s=stagger,
+                              priority_mix=args.priority_mix,
+                              shared_prefix=args.shared_prefix,
+                              arrival_mode="bursty"
+                              if args.workload == "bursty" else "uniform",
+                              collect_streams=collect_streams)
+
+
+def _check_leaks(args, engine):
+    """Every page must be back in the allocator once the prefix index
+    lets go — a leak here is an engine bug, so fail loudly."""
+    if args.cache_mode != "paged":
+        return
+    engine.release_prefix_cache()
+    leaked = engine.leaked_pages()
+    if leaked:
+        raise SystemExit(f"page leak: {leaked} page(s) still booked "
+                         f"after drain + prefix-cache release")
+
+
+def _verify(args, cfg, r):
+    """Re-run the identical workload on a single-device tp=1/dp=1
+    reference and demand token-for-token equality.  Greedy only — and
+    dense-only when dp > 1: w8a8 activation scales are per-tensor over
+    the batch, so changing which requests share a decode chunk (which
+    dp placement does) legitimately shifts quantized streams."""
+    if args.temperature > 0:
+        raise SystemExit("--verify needs greedy streams "
+                         "(--temperature 0)")
+    if args.dp > 1 and args.quant != "dense":
+        raise SystemExit("--verify with --dp > 1 needs --quant dense: "
+                         "batched activation quantization is batch-"
+                         "composition-dependent, so placement changes "
+                         "quantized streams")
+    cfg_ref, _, ref = _build(args, reference=True)
+    ref_r = _run_workload(args, cfg_ref, ref, collect_streams=True)
+    _check_leaks(args, ref)
+    if r["streams"] != ref_r["streams"]:
+        bad = [i for i in r["streams"]
+               if r["streams"][i] != ref_r["streams"][i]]
+        raise SystemExit(f"verify FAILED: {len(bad)}/{len(r['streams'])} "
+                         f"stream(s) diverge from the single-device "
+                         f"reference (request ids {bad[:8]})")
+    print(f"  verify: {len(r['streams'])} streams bit-match the "
+          f"single-device reference")
+
+
 def run_requests(args, cfg, engine):
     """Request-level workload: ``uniform`` submits everything at t=0,
     ``staggered`` spaces arrivals by --stagger-ms, ``bursty`` clusters
     Poisson bursts at the same mean load with Pareto heavy-tail prompt
     lengths (slots refill mid-stream in all three)."""
-    from repro.serve import run_timed_workload
-    stagger = args.stagger_ms / 1000.0 \
-        if args.workload in ("staggered", "bursty") else 0.0
-    r = run_timed_workload(engine, cfg.vocab_size, requests=args.requests,
-                           prompt_budget=args.prompt_len,
-                           new_tokens=args.new_tokens, stagger_s=stagger,
-                           priority_mix=args.priority_mix,
-                           shared_prefix=args.shared_prefix,
-                           arrival_mode="bursty"
-                           if args.workload == "bursty" else "uniform")
+    r = _run_workload(args, cfg, engine, collect_streams=args.verify)
+    _check_leaks(args, engine)
     print(f"arch={cfg.name} quant={args.quant} backend={args.quant_backend} "
           f"cache={args.cache_mode} workload={args.workload} "
           f"requests={args.requests} slots={args.batch}")
+    print(f"  topology: {r['device_count']} device(s), per-engine mesh "
+          f"{tuple(r['mesh_shape'])}, dp_replicas={r['dp_replicas']}")
     print(f"  compile+warmup: {r['compile_s']:.2f}s   "
           f"(compilations: {r['compile_counts']})")
     print(f"  steady-state:   {r['tokens']} tokens in {r['wall_s']:.2f}s "
@@ -147,12 +217,24 @@ def run_requests(args, cfg, engine):
     if args.prefix_cache:
         print(f"  prefix cache: hit rate {r['prefix_hit_rate']:.0%} of "
               f"prompt tokens, {r['prefill_tokens']} tokens prefilled")
+    if "per_replica" in r:
+        for pr in r["per_replica"]:
+            print(f"  replica {pr['replica']}: {pr['placed']} placed, "
+                  f"affinity hit rate {pr['affinity_hit_rate']:.0%}, "
+                  f"prefix hit rate {pr['prefix_hit_rate']:.0%}, "
+                  f"preemptions {pr['preemptions']}")
     if r["truncated"]:
         print(f"  WARNING: {r['truncated']} request(s) truncated at the "
               f"max_len budget")
     if "hi_req_p50_ms" in r:
-        print(f"  priority split:  hi p50={r['hi_req_p50_ms']:.0f}ms  "
-              f"lo p50={r['lo_req_p50_ms']:.0f}ms")
+        # an empty priority class reports None, not a number
+        hi = r["hi_req_p50_ms"]
+        lo = r["lo_req_p50_ms"]
+        hi_s = "n/a (no hi requests)" if hi is None else f"p50={hi:.0f}ms"
+        lo_s = "n/a (no lo requests)" if lo is None else f"p50={lo:.0f}ms"
+        print(f"  priority split:  hi {hi_s}  lo {lo_s}")
+    if args.verify:
+        _verify(args, cfg, r)
 
 
 def main(argv=None):
@@ -229,8 +311,30 @@ def main(argv=None):
                              "lut"],
                     help="draft-side quant mode (default: the engine's "
                          "--quant; the verifier always runs dense)")
+    ap.add_argument("--tp", type=int, default=1,
+                    help="tensor-parallel shards per engine: weights and "
+                         "paged KV pools shard over a (1, tp) device "
+                         "mesh's \"model\" axis (greedy streams stay "
+                         "token-identical to tp=1)")
+    ap.add_argument("--dp", type=int, default=1,
+                    help="data-parallel engine replicas behind one "
+                         "admission router (least-loaded placement with "
+                         "priority ordering and prefix-cache affinity); "
+                         "each replica gets its own disjoint --tp-sized "
+                         "device group")
+    ap.add_argument("--mesh", default=None,
+                    help="per-engine mesh shape DATAxMODEL (e.g. 1x2); "
+                         "overrides --tp when set")
+    ap.add_argument("--verify", action="store_true",
+                    help="re-run the workload on a single-device tp=1/"
+                         "dp=1 reference and require token-for-token "
+                         "stream equality (greedy only; dense quant "
+                         "when --dp > 1)")
     args = ap.parse_args(argv)
 
+    if args.workload == "batch" and args.dp > 1:
+        raise SystemExit("--dp applies to request workloads "
+                         "(uniform/staggered/bursty), not batch mode")
     cfg, _, engine = _build(args)
     if args.workload == "batch":
         run_batch(args, cfg, engine)

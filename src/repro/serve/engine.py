@@ -217,6 +217,21 @@ class ServeConfig:
     #   for itself).  The verifier always runs dense — in spec mode the
     #   engine pins its prefill/verify config to quant_mode="dense" and
     #   the quant knobs configure the *draft* program only.
+    tp: int = 1                       # tensor-parallel width: shard the
+    #   weights (param_specs rules) and the paged KV/scale pools'
+    #   KV-head dimension (cache_specs paged rules; in-page sequence
+    #   fallback when heads don't divide) over the mesh's "model" axis,
+    #   and build every compiled program with explicit in/out shardings
+    #   under a (1, tp) local mesh.  The page table stays host-side and
+    #   replicated.  1 = no mesh — the single-device engine, unchanged.
+    #   Greedy streams under tp > 1 bit-match the single-device engine
+    #   token-for-token (argmax is stable under the reduction-order
+    #   shifts TP's partial-sum collectives introduce).
+    mesh_shape: tuple | None = None   # explicit (data, model) in-engine
+    #   mesh shape; overrides ``tp`` (the two must agree when both are
+    #   given).  None = derived from ``tp``.  Data-parallelism across
+    #   *requests* belongs one level up — ``serve.router.Router`` runs
+    #   N single- or TP-meshed engine replicas behind one queue.
 
 
 @dataclasses.dataclass
@@ -448,7 +463,8 @@ class Engine:
     the module docstring for the execution model and ``docs/serving.md``
     for the operator-facing reference."""
 
-    def __init__(self, cfg: ModelConfig, params, scfg: ServeConfig):
+    def __init__(self, cfg: ModelConfig, params, scfg: ServeConfig,
+                 devices=None):
         if scfg.prefill_len > scfg.max_len:
             raise ValueError(f"prefill_len {scfg.prefill_len} exceeds "
                              f"max_len {scfg.max_len}")
@@ -521,26 +537,115 @@ class Engine:
             # (acceptance is defined against the dense model's output)
             self._draft_cfg, self.cfg = spec_split(self.cfg,
                                                    scfg.spec_quant_mode)
+        # TP mesh: built before the compiled stages so their explicit
+        # in/out shardings can reference the sharded param/cache trees
+        # (None = no mesh, the single-device engine — every jit is then
+        # built without sharding kwargs, so its signatures, and with
+        # them the compile_counts pins, are untouched)
+        self._mesh = self._build_mesh(devices)
+        self._caches = init_caches(self.cfg, scfg.batch, scfg.max_len)
+        if self._mesh is not None:
+            self._shard_state()
         # the cache slab/pool is donated: both stages rebind it from the
         # return value, so the update happens in place instead of
-        # copying every unmodified row
+        # copying every unmodified row (the out_shardings under a mesh
+        # match the donated input's, so donation still applies)
+        n_pre = 10 if scfg.prefix_cache else 7
         self._prefill_fn = _CountingJit(self._build_prefill(),
-                                        donate_argnums=1)
+                                        donate_argnums=1,
+                                        **self._stage_shardings(n_pre, 2))
         if self._spec:
             # exactly two decode-side programs — one quantized draft,
             # one dense verify; _chunk_fn is never built or called, so
             # its pinned compile count is 0 (see ``compile_counts``)
             self._chunk_fn = None
             self._draft_fn = _CountingJit(self._build_draft(),
-                                          donate_argnums=1)
+                                          donate_argnums=1,
+                                          **self._stage_shardings(10, 3))
             self._verify_fn = _CountingJit(self._build_verify(),
-                                           donate_argnums=1)
+                                           donate_argnums=1,
+                                           **self._stage_shardings(10, 3))
         else:
             self._chunk_fn = _CountingJit(self._build_decode_chunk(),
-                                          donate_argnums=1)
-        self._caches = init_caches(self.cfg, scfg.batch, scfg.max_len)
+                                          donate_argnums=1,
+                                          **self._stage_shardings(11, 7))
         self._next_id = 0
         self.reset()
+
+    # ------------------------------------------------------------------
+    # mesh / sharding plumbing
+    # ------------------------------------------------------------------
+
+    def _build_mesh(self, devices):
+        scfg = self.scfg
+        if scfg.tp < 1:
+            raise ValueError(f"tp must be >= 1, got {scfg.tp}")
+        shape = scfg.mesh_shape
+        if shape is not None:
+            shape = tuple(int(x) for x in shape)
+            if len(shape) != 2:
+                raise ValueError(f"mesh_shape must be (data, model), got "
+                                 f"{scfg.mesh_shape!r}")
+            if scfg.tp != 1 and shape[1] != scfg.tp:
+                raise ValueError(f"mesh_shape {shape} disagrees with "
+                                 f"tp={scfg.tp} on the model axis")
+        elif scfg.tp > 1:
+            shape = (1, scfg.tp)
+        if shape is None or shape == (1, 1):
+            return None
+        from repro.launch.mesh import make_local_mesh
+        return make_local_mesh(dp=shape[0], tp=shape[1], devices=devices)
+
+    def _shard_state(self):
+        """Commit the params and the cache slab/pools to the mesh with
+        the repo's partition rules: weights via ``param_specs``
+        (megatron col/row TP pairs), caches via ``cache_specs`` (paged
+        branch: KV heads on "model" when divisible, in-page sequence
+        axis otherwise; the page table ships replicated with every
+        dispatch — see ``distributed.sharding.page_table_spec``)."""
+        from jax.sharding import NamedSharding
+        from jax.sharding import PartitionSpec as P
+
+        from repro.distributed.sharding import cache_specs, param_specs
+
+        def to_shardings(specs):
+            return jax.tree_util.tree_map(
+                lambda s: NamedSharding(self._mesh, s), specs,
+                is_leaf=lambda x: isinstance(x, P))
+
+        self._param_sh = to_shardings(param_specs(self.params, self._mesh))
+        self._cache_sh = to_shardings(
+            cache_specs(self.cfg, self._caches, self._mesh,
+                        batch=self.scfg.batch))
+        self._repl = NamedSharding(self._mesh, P())
+        self.params = jax.device_put(self.params, self._param_sh)
+        self._caches = jax.device_put(self._caches, self._cache_sh)
+
+    def _stage_shardings(self, n_args: int, n_outs: int) -> dict:
+        """jit kwargs for one compiled stage: params and caches keep
+        their committed shardings, every other argument and output
+        (tokens, positions, page-table rows, rng keys — all host-
+        authored) is replicated.  Empty without a mesh, so the
+        single-device jit signature is byte-identical to before."""
+        if self._mesh is None:
+            return {}
+        r = self._repl
+        return {"in_shardings": (self._param_sh, self._cache_sh)
+                + (r,) * (n_args - 2),
+                "out_shardings": (self._cache_sh,) + (r,) * (n_outs - 1)}
+
+    @property
+    def mesh_shape(self) -> tuple:
+        """(data, model) shape of the in-engine mesh; (1, 1) unmeshed."""
+        if self._mesh is None:
+            return (1, 1)
+        return (int(self._mesh.shape["data"]),
+                int(self._mesh.shape["model"]))
+
+    @property
+    def device_count(self) -> int:
+        """Devices this engine's programs span (1 without a mesh)."""
+        return 1 if self._mesh is None else int(self._mesh.devices.size)
 
     # ------------------------------------------------------------------
     # compiled stages
@@ -955,17 +1060,11 @@ class Engine:
             rows += 1                 # first decode write lands at row p_len
         return pages_needed(rows, self._page_size)
 
-    def submit(self, prompt, max_new_tokens: int, arrival: float = 0.0,
-               priority: int = 0) -> int:
-        """Queue one request; returns its id.  ``arrival`` (seconds from
-        ``run()`` start) models staggered workloads — the request is not
-        admitted to a slot before its arrival time.  ``priority`` orders
-        admission (higher first; see ``ServeConfig.priority_aging_s``)
-        and preemption (a strictly-higher-priority arrival may evict a
-        running slot).  A ``max_new_tokens`` that cannot fit the
-        ``max_len`` budget is clamped and flagged on the returned
-        request (``Request.truncated``) — explicit, never mistaken for
-        an early EOS."""
+    def validate(self, prompt, max_new_tokens: int):
+        """Submit-time validation, shared with the router (which must
+        reject an unserveable request at *its* front door rather than
+        crash a replica at placement): returns the canonicalized
+        ``(prompt, clamped_new_tokens, truncated)`` triple or raises."""
         prompt = np.asarray(prompt, np.int32).reshape(-1)
         scfg = self.scfg
         if max_new_tokens < 1:
@@ -980,15 +1079,33 @@ class Engine:
                              f"slot budget prefill_len={scfg.prefill_len}")
         budget = scfg.max_len - prompt.size
         truncated = max_new_tokens > budget
+        clamped = min(max_new_tokens, budget)
+        if self._paged:
+            rows = prompt.size + clamped - 1
+            need = pages_needed(rows, self._page_size)
+            if need > self.allocator.capacity:
+                raise ValueError(
+                    f"request needs {need} pages but the pool capacity "
+                    f"is {self.allocator.capacity}; raise num_pages or "
+                    f"shorten the request")
+        return prompt, clamped, truncated
+
+    def submit(self, prompt, max_new_tokens: int, arrival: float = 0.0,
+               priority: int = 0) -> int:
+        """Queue one request; returns its id.  ``arrival`` (seconds from
+        ``run()`` start) models staggered workloads — the request is not
+        admitted to a slot before its arrival time.  ``priority`` orders
+        admission (higher first; see ``ServeConfig.priority_aging_s``)
+        and preemption (a strictly-higher-priority arrival may evict a
+        running slot).  A ``max_new_tokens`` that cannot fit the
+        ``max_len`` budget is clamped and flagged on the returned
+        request (``Request.truncated``) — explicit, never mistaken for
+        an early EOS."""
+        prompt, clamped, truncated = self.validate(prompt, max_new_tokens)
         req = Request(id=self._next_id, prompt=prompt,
-                      max_new_tokens=min(max_new_tokens, budget),
+                      max_new_tokens=clamped,
                       arrival=arrival, priority=priority,
                       truncated=truncated)
-        if self._paged and self._pages_for(req) > self.allocator.capacity:
-            raise ValueError(
-                f"request needs {self._pages_for(req)} pages but the pool "
-                f"capacity is {self.allocator.capacity}; raise num_pages "
-                f"or shorten the request")
         self._next_id += 1
         self._queue.push(req)
         return req.id
@@ -1493,57 +1610,80 @@ class Engine:
             elif self._paged:
                 self._spec_rollback(slot)
 
+    def start(self, t0: float | None = None) -> None:
+        """Anchor the run clock (arrivals and latency stamps are
+        relative to it).  The router starts every replica on one shared
+        ``t0`` so fleet-level percentiles are comparable."""
+        self._t0 = time.perf_counter() if t0 is None else t0
+
+    def step(self, wait: bool = True) -> bool:
+        """One scheduler iteration: admit arrived requests, then run one
+        decode chunk (or speculation round) if anything is active.
+        Returns ``False`` once the engine is drained — no queued and no
+        running requests.  ``wait=False`` skips the idle sleep before a
+        future arrival (the router drives many replicas from one thread
+        and must not block on the idlest one)."""
+        if not (len(self._queue)
+                or any(r is not None for r in self._slots)):
+            return False
+        now = time.perf_counter() - self._t0
+        self._admit(now)
+        if not self._active.any():
+            if not len(self._queue):
+                return False           # drained this iteration
+            nxt = self._queue.next_arrival()
+            wait_s = nxt - (time.perf_counter() - self._t0)
+            if wait_s > 0:             # idle until the next arrival
+                if wait:
+                    time.sleep(min(wait_s, 0.05))
+                return True
+            if nxt > now:
+                # the request arrived *during* this iteration's _admit
+                # window (arrival gating hid it from the `now` snapshot
+                # _admit was given) — loop back and admit it with a
+                # fresh clock, this is a healthy staggered workload,
+                # not a stall
+                return True
+            # a request _admit could already see went unadmitted with
+            # every slot idle.  An idle engine holds no pages, so this
+            # is not backpressure — it is a page leak or an
+            # unsatisfiable request, and overcommit/preemption make the
+            # state reachable where it was once provably not.  Fail
+            # loudly rather than spin on _admit forever.
+            detail = ""
+            if self._paged:
+                cached = (len(self.prefix_cache.pages)
+                          if self.prefix_cache is not None else 0)
+                detail = (f" ({self.allocator.in_use} pages "
+                          f"still in use — {cached} pinned by "
+                          f"the prefix index — "
+                          f"{self.allocator.available} free of "
+                          f"{self.allocator.capacity} "
+                          f"allocatable)")
+            raise RuntimeError(
+                f"serve scheduler stalled: {len(self._queue)} "
+                f"arrived request(s) cannot be admitted with "
+                f"all slots idle{detail}")
+        now = time.perf_counter() - self._t0
+        if self._spec:
+            self._run_spec_round(now)
+        else:
+            self._run_chunk(now)
+        return True
+
+    def drain(self) -> dict[int, Request]:
+        """Hand over (and clear) the finished-request map."""
+        out, self._finished = self._finished, {}
+        return out
+
     def run(self) -> dict[int, Request]:
         """Drain the queue: admit → chunked decode → refill, until every
         submitted request has finished.  Returns {id: Request} with
         per-request timing (t_first / t_done relative to run start)."""
-        self._t0 = time.perf_counter()
-        while len(self._queue) or any(r is not None for r in self._slots):
-            now = time.perf_counter() - self._t0
-            self._admit(now)
-            if not self._active.any():
-                if len(self._queue):   # idle until the next arrival
-                    nxt = self._queue.next_arrival()
-                    wait = nxt - (time.perf_counter() - self._t0)
-                    if wait > 0:
-                        time.sleep(min(wait, 0.05))
-                        continue
-                    if nxt > now:
-                        # the request arrived *during* this iteration's
-                        # _admit window (arrival gating hid it from the
-                        # `now` snapshot _admit was given) — loop back
-                        # and admit it with a fresh clock, this is a
-                        # healthy staggered workload, not a stall
-                        continue
-                    # a request _admit could already see went unadmitted
-                    # with every slot idle.  An idle engine holds no
-                    # pages, so this is not backpressure — it is a page
-                    # leak or an unsatisfiable request, and
-                    # overcommit/preemption make the state reachable
-                    # where it was once provably not.  Fail loudly
-                    # rather than spin on _admit forever.
-                    detail = ""
-                    if self._paged:
-                        cached = (len(self.prefix_cache.pages)
-                                  if self.prefix_cache is not None else 0)
-                        detail = (f" ({self.allocator.in_use} pages "
-                                  f"still in use — {cached} pinned by "
-                                  f"the prefix index — "
-                                  f"{self.allocator.available} free of "
-                                  f"{self.allocator.capacity} "
-                                  f"allocatable)")
-                    raise RuntimeError(
-                        f"serve scheduler stalled: {len(self._queue)} "
-                        f"arrived request(s) cannot be admitted with "
-                        f"all slots idle{detail}")
-                break
-            now = time.perf_counter() - self._t0
-            if self._spec:
-                self._run_spec_round(now)
-            else:
-                self._run_chunk(now)
-        out, self._finished = self._finished, {}
-        return out
+        self.start()
+        while self.step():
+            pass
+        return self.drain()
 
     def release_prefix_cache(self) -> None:
         """Drop every page reference the prefix index holds (teardown /
@@ -1551,6 +1691,13 @@ class Engine:
         allocator must report ``in_use == 0``)."""
         if self.prefix_cache is not None:
             self.prefix_cache.drop()
+
+    def leaked_pages(self) -> int:
+        """Pages still held after a drained engine has released every
+        legitimate holder (call ``release_prefix_cache`` first when the
+        prefix index is on) — anything non-zero is a leak.  0 in dense
+        mode (there is no pool to leak from)."""
+        return self.allocator.in_use if self._paged else 0
 
     # ------------------------------------------------------------------
     # batch convenience API (examples / tests)

@@ -70,7 +70,8 @@ import hashlib
 
 import numpy as np
 
-__all__ = ["PageAllocator", "PageTable", "PrefixCache", "pages_needed"]
+__all__ = ["PageAllocator", "PageTable", "PrefixCache", "pages_needed",
+           "hash_chunks"]
 
 
 def pages_needed(rows: int, page_size: int) -> int:
@@ -78,6 +79,24 @@ def pages_needed(rows: int, page_size: int) -> int:
     if rows <= 0:
         return 0
     return -(-rows // page_size)
+
+
+def hash_chunks(tokens, page_size: int) -> list[bytes]:
+    """Hash-chain keys for every *full* page-aligned chunk of ``tokens``
+    (the partial tail chunk is never indexed).  Chunk ``j``'s key
+    digests chunk ``j-1``'s key plus chunk ``j``'s tokens, so one key
+    commits to the entire prefix before it.  Module-level because the
+    keys identify *token content*, not any one engine's pool: the serve
+    router hashes a prompt once and probes every replica's
+    ``PrefixCache.match`` with the same chain (prefix affinity)."""
+    tokens = np.asarray(tokens, np.int32).reshape(-1)
+    keys, prev = [], b""
+    for j in range(tokens.size // page_size):
+        chunk = tokens[j * page_size:(j + 1) * page_size]
+        prev = hashlib.blake2b(prev + chunk.tobytes(),
+                               digest_size=16).digest()
+        keys.append(prev)
+    return keys
 
 
 class PageAllocator:
@@ -363,14 +382,7 @@ class PrefixCache:
     def chunk_keys(self, tokens) -> list[bytes]:
         """Hash-chain keys for every *full* page-aligned chunk of
         ``tokens`` (the partial tail chunk is never indexed)."""
-        tokens = np.asarray(tokens, np.int32).reshape(-1)
-        keys, prev = [], b""
-        for j in range(tokens.size // self.page_size):
-            chunk = tokens[j * self.page_size:(j + 1) * self.page_size]
-            prev = hashlib.blake2b(prev + chunk.tobytes(),
-                                   digest_size=16).digest()
-            keys.append(prev)
-        return keys
+        return hash_chunks(tokens, self.page_size)
 
     def match(self, keys: list[bytes]) -> list[int]:
         """Pages of the longest cached *consecutive* chunk run from

@@ -53,12 +53,28 @@ import numpy as np
 __all__ = ["run_timed_workload"]
 
 
+def _pct(a, q) -> float | None:
+    """Percentile that survives an empty sample: ``None`` instead of
+    numpy's NaN-with-RuntimeWarning.  Per-class latency splits hit this
+    whenever a priority class drew zero requests (priority_mix near 0
+    or 1 with few requests)."""
+    if a is None or len(a) == 0:
+        return None
+    return float(np.percentile(a, q))
+
+
+def _ms(x: float | None, digits: int = 1) -> float | None:
+    """Seconds → rounded milliseconds, passing ``None`` through."""
+    return None if x is None else round(x * 1e3, digits)
+
+
 def run_timed_workload(engine, vocab_size: int, *, requests: int,
                        prompt_budget: int, new_tokens: int,
                        stagger_s: float = 0.0, seed: int = 0,
                        priority_mix: float = 0.0,
                        shared_prefix: float = 0.0,
-                       arrival_mode: str = "uniform") -> dict:
+                       arrival_mode: str = "uniform",
+                       collect_streams: bool = False) -> dict:
     """Submit ``requests`` random prompts and drain the engine; returns
     throughput/latency stats.  ``arrival_mode="uniform"`` spaces
     arrivals ``stagger_s`` apart with lengths uniform in
@@ -127,15 +143,28 @@ def run_timed_workload(engine, vocab_size: int, *, requests: int,
         tail = rng.integers(0, vocab_size, n - sys_prompt.size)
         return np.concatenate([sys_prompt, tail])
 
-    # warmup: trigger every compilation outside the timed window
-    engine.submit(rng.integers(0, vocab_size, int(lens[0])), 2)
+    # draw every prompt BEFORE warmup, so the timed workload is a pure
+    # function of (seed, workload knobs) — the warmup below submits a
+    # replica-count-dependent number of requests from its own rng, and
+    # must not shift the main stream (a dp=2 fleet and a solo engine
+    # must see byte-identical prompts for the launcher's --verify)
+    prompts = [make_prompt(i) for i in range(requests)]
+
+    # warmup: trigger every compilation outside the timed window — one
+    # request per engine replica (a Router's JSQ placement spreads the
+    # batch one-per-replica over an idle fleet, so every replica
+    # compiles its programs here, not inside the timed run)
+    n_warm = len(getattr(engine, "replicas", ())) or 1
+    wrng = np.random.default_rng(np.random.SeedSequence([seed, 0xC0]))
+    for _ in range(n_warm):
+        engine.submit(wrng.integers(0, vocab_size, int(lens[0])), 2)
     t0 = time.perf_counter()
     engine.run()
     compile_s = time.perf_counter() - t0
     engine.reset()           # also empties the prefix index: the timed
     #                          run starts from a cold cache
 
-    ids = [engine.submit(make_prompt(i), new_tokens,
+    ids = [engine.submit(prompts[i], new_tokens,
                          arrival=float(arrivals[i]),
                          priority=int(prios[i]))
            for i in range(requests)]
@@ -166,12 +195,12 @@ def run_timed_workload(engine, vocab_size: int, *, requests: int,
         "tokens": toks,
         "wall_s": round(wall, 3),
         "tok_per_s": round(toks / wall, 1),
-        "req_p50_ms": round(float(np.percentile(lat, 50)) * 1e3, 1),
-        "req_p99_ms": round(float(np.percentile(lat, 99)) * 1e3, 1),
-        "ttft_p50_ms": round(float(np.percentile(ttft, 50)) * 1e3, 1),
-        "ttft_p99_ms": round(float(np.percentile(ttft, 99)) * 1e3, 1),
-        "itl_p50_ms": round(float(np.percentile(itl, 50)) * 1e3, 2),
-        "itl_p99_ms": round(float(np.percentile(itl, 99)) * 1e3, 2),
+        "req_p50_ms": _ms(_pct(lat, 50)),
+        "req_p99_ms": _ms(_pct(lat, 99)),
+        "ttft_p50_ms": _ms(_pct(ttft, 50)),
+        "ttft_p99_ms": _ms(_pct(ttft, 99)),
+        "itl_p50_ms": _ms(_pct(itl, 50), 2),
+        "itl_p99_ms": _ms(_pct(itl, 99), 2),
         "cache_kb_per_req": round(float(cache_rows.mean())
                                   * engine.cache_token_bytes / 1024.0, 1),
         "preemptions": stats["preemptions"],
@@ -187,10 +216,25 @@ def run_timed_workload(engine, vocab_size: int, *, requests: int,
         "truncated": int(sum(done[i].truncated for i in ids)),
         "compile_s": round(compile_s, 2),
         "compile_counts": engine.compile_counts,
+        # topology: 1 / [1, 1] / 1 for a plain single-device engine, so
+        # every result row names the hardware it ran on
+        "device_count": int(getattr(engine, "device_count", 1)),
+        "mesh_shape": list(getattr(engine, "mesh_shape", (1, 1))),
+        "dp_replicas": stats.get("dp_replicas", 1),
     }
-    if priority_mix > 0.0 and prios.any() and not prios.all():
+    if priority_mix > 0.0:
+        # always emit both class keys when a split was requested — an
+        # empty class (mix rounded to all-hi or all-lo) reports None
+        # rather than vanishing, so downstream readers see a stable
+        # schema
         for cls, name in ((1, "hi"), (0, "lo")):
-            sel = lat[prios == cls]
-            out[f"{name}_req_p50_ms"] = round(
-                float(np.percentile(sel, 50)) * 1e3, 1)
+            out[f"{name}_req_p50_ms"] = _ms(_pct(lat[prios == cls], 50))
+    if "per_replica" in stats:
+        out["per_replica"] = stats["per_replica"]
+    if collect_streams:
+        # keyed by submission index, not engine id — ids are topology-
+        # dependent (warmup consumes a replica-count worth of them), and
+        # --verify compares streams across topologies
+        out["streams"] = {n: list(done[i].tokens)
+                          for n, i in enumerate(ids)}
     return out

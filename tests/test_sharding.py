@@ -119,6 +119,93 @@ def test_mini_dryrun_subprocess():
     assert result["ok"]
 
 
+def test_paged_kv_pool_shards_kv_heads_when_divisible():
+    """(num_pages, page_size, KVH, D) pools put KV heads on the model
+    axis when they divide it; the page-id axis is never sharded."""
+    from types import SimpleNamespace
+
+    from repro.distributed.sharding import cache_specs
+    cfg = SimpleNamespace(cache_mode="paged", n_kv_heads=2)
+    caches = {"k": FakeLeaf(10, 4, 2, 16), "v": FakeLeaf(10, 4, 2, 16)}
+    specs = cache_specs(cfg, caches, FakeMesh(), batch=2)
+    assert specs["k"] == P(None, None, "model", None)
+    assert specs["v"] == P(None, None, "model", None)
+
+
+def test_paged_kv_pool_falls_back_to_page_sequence_axis():
+    """KV heads that don't divide the model axis (GQA reduced to odd
+    head counts) shard the in-page sequence axis instead — and when
+    page_size doesn't divide either, the pool stays replicated rather
+    than letting GSPMD reject the program."""
+    from types import SimpleNamespace
+
+    from repro.distributed.sharding import cache_specs
+    cfg = SimpleNamespace(cache_mode="paged", n_kv_heads=3)
+    specs = cache_specs(cfg, {"k": FakeLeaf(10, 4, 3, 16)}, FakeMesh(),
+                        batch=2)
+    assert specs["k"] == P(None, "model", None, None)
+    specs = cache_specs(cfg, {"k": FakeLeaf(10, 5, 3, 16)}, FakeMesh(),
+                        batch=2)
+    assert specs["k"] == P(None, None, None, None)
+
+
+def test_paged_scale_pools_follow_the_kv_rule():
+    """int8 quant scale pools (..., 1) shard exactly like their KV
+    pools — a shard must hold the scales for the rows it owns."""
+    from types import SimpleNamespace
+
+    from repro.distributed.sharding import cache_specs
+    cfg = SimpleNamespace(cache_mode="paged", n_kv_heads=2)
+    specs = cache_specs(cfg, {"k_scale": FakeLeaf(10, 4, 2, 1)},
+                        FakeMesh(), batch=2)
+    assert specs["k_scale"] == P(None, None, "model", None)
+
+
+def test_paged_mla_and_stacked_and_mamba_rules():
+    """MLA latent pools (num_pages, page_size, rank) have no head axis
+    — the in-page sequence axis shards; a stacked (blocks-leading)
+    pool gets a leading None; mamba state keeps its per-slot dense
+    rule even in paged mode."""
+    from types import SimpleNamespace
+
+    from repro.distributed.sharding import cache_specs
+    cfg = SimpleNamespace(cache_mode="paged", n_kv_heads=2)
+    specs = cache_specs(
+        cfg, {"c_kv": FakeLeaf(10, 4, 8),
+              "blocks": {"k": FakeLeaf(3, 10, 4, 2, 16)},
+              "conv": FakeLeaf(4, 3, 8)},
+        FakeMesh(), batch=2)
+    assert specs["c_kv"] == P(None, "model", None)
+    assert specs["blocks"]["k"] == P(None, None, None, "model", None)
+    assert specs["conv"] == P(("data",), None, "model")
+
+
+def test_page_table_spec_is_replicated():
+    from repro.distributed.sharding import page_table_spec
+    assert page_table_spec(FakeMesh()) == P(None, None)
+
+
+def test_make_local_mesh_sizing_and_validation():
+    """tp/dp sizing on the single local device: tp=1 works (and the
+    no-argument call keeps the (n, 1) shape), anything needing more
+    devices than exist raises with the sizes in the message."""
+    from repro.launch.mesh import make_local_mesh
+    n = len(jax.devices())
+    mesh = make_local_mesh()
+    assert mesh.axis_names == ("data", "model")
+    assert mesh.shape == {"data": n, "model": 1}
+    mesh = make_local_mesh(dp=1, tp=1)
+    assert mesh.shape == {"data": 1, "model": 1}
+    with pytest.raises(ValueError, match="tp must be >= 1"):
+        make_local_mesh(tp=0)
+    with pytest.raises(ValueError, match="dp must be >= 0"):
+        make_local_mesh(dp=-1)
+    with pytest.raises(ValueError, match=f"does not divide the {n}"):
+        make_local_mesh(tp=2 * n)
+    with pytest.raises(ValueError, match="needs"):
+        make_local_mesh(dp=n, tp=2)
+
+
 def test_maybe_shard_noop_without_mesh():
     """No ambient mesh → constraints are identity (unit-test safety)."""
     import jax.numpy as jnp
