@@ -36,6 +36,14 @@ multi-token forward.  ``acceptance_rate`` and ``tokens_per_step`` are
 the spec columns; greedy acceptance keeps the emitted streams
 bit-identical to the baseline's.
 
+A **tail-latency pair** (``workload=burst_tail``) drives the bursty
+heavy-tail workload over the overcommitted incremental pool with the
+tail mechanisms off vs on — chunked wave prefill (``prefill_chunk=4``),
+grouped admission (``admit_group=4``) and the host-tier page swap
+(``swap_mode="host"``).  The p99 TTFT/ITL columns are the headline;
+``swap_out``/``swap_in``/``replay_steps_saved`` count the swap traffic
+and the replayed decode steps it saved.
+
 CPU wall-clock is a functional proxy (pallas runs in interpret mode —
 correctness, not speed); the uniform-vs-staggered *ratio*, the latency
 percentiles and the per-request cache HBM column are the transferable
@@ -82,17 +90,19 @@ SHARED_PREFIX = 0.75
 SPEC_K = 4
 SPEC_DRAFT = "w8a8_nibble"
 
-_HEADER = ("workload,quant,backend,cache,alloc,prefix,spec,pool_pages,"
+_HEADER = ("workload,quant,backend,cache,alloc,prefix,spec,tail,pool_pages,"
            "requests,slots,tok_per_s,req_p50_ms,req_p99_ms,ttft_p50_ms,"
            "ttft_p99_ms,itl_p50_ms,itl_p99_ms,cache_kb_per_req,occupancy,"
-           "concurrency,preemptions,prefix_hit_rate,acceptance_rate,"
+           "concurrency,preemptions,swap_out,swap_in,replay_steps_saved,"
+           "prefix_hit_rate,acceptance_rate,"
            "tokens_per_step,compile_s,device_count,mesh,dp_replicas")
 
 
 def _bench_one(cfg, params, quant, backend, workload, cache_mode,
                alloc_mode="reserve", num_pages=None, prefix_cache=False,
                shared_prefix=0.0, arrival_mode="uniform", decode_chunk=8,
-               spec=False, tp=1, dp=1):
+               spec=False, tp=1, dp=1, prefill_chunk=0, admit_group=1,
+               swap_mode="off", requests=REQUESTS):
     from repro.serve import Engine, Router, ServeConfig, run_timed_workload
     scfg = ServeConfig(batch=SLOTS, max_len=MAX_LEN,
                        prefill_len=PROMPT_BUDGET, decode_chunk=decode_chunk,
@@ -102,14 +112,15 @@ def _bench_one(cfg, params, quant, backend, workload, cache_mode,
                        num_pages=num_pages, spec_decode=spec,
                        spec_k=SPEC_K,
                        spec_quant_mode=SPEC_DRAFT if spec else None,
-                       tp=tp)
+                       tp=tp, prefill_chunk=prefill_chunk,
+                       admit_group=admit_group, swap_mode=swap_mode)
     if dp > 1:
         engine = Router(cfg, params, scfg, replicas=dp)
     else:
         engine = Engine(cfg, params, scfg)
     stagger = STAGGER_S if (workload in ("staggered", "mesh")
                             or arrival_mode == "bursty") else 0.0
-    r = run_timed_workload(engine, cfg.vocab_size, requests=REQUESTS,
+    r = run_timed_workload(engine, cfg.vocab_size, requests=requests,
                            prompt_budget=PROMPT_BUDGET,
                            new_tokens=NEW_TOKENS, stagger_s=stagger,
                            shared_prefix=shared_prefix,
@@ -121,9 +132,20 @@ def _bench_one(cfg, params, quant, backend, workload, cache_mode,
     # killing the whole benchmark the way the old jax-private probe did)
     warn = None
     # the pinned per-mode contract: spec engines build exactly one
-    # draft and one verify program and never the plain decode chunk
-    expected = ({"prefill": 1, "decode_chunk": 0, "draft": 1, "verify": 1}
-                if spec else {"prefill": 1, "decode_chunk": 1})
+    # draft and one verify program and never the plain decode chunk;
+    # wave engines (chunked/grouped prefill) build exactly one wave
+    # program and never the monolithic prefill
+    wave = prefill_chunk > 0 or admit_group > 1
+    if wave and spec:
+        expected = {"prefill": 0, "decode_chunk": 0, "prefill_chunk": 1,
+                    "draft": 1, "verify": 1}
+    elif wave:
+        expected = {"prefill": 0, "decode_chunk": 1, "prefill_chunk": 1}
+    elif spec:
+        expected = {"prefill": 1, "decode_chunk": 0, "draft": 1,
+                    "verify": 1}
+    else:
+        expected = {"prefill": 1, "decode_chunk": 1}
     if any(v < 0 for v in counts.values()):
         warn = "# warning: compile-count introspection unavailable"
     elif counts != expected:
@@ -141,18 +163,21 @@ def _bench_one(cfg, params, quant, backend, workload, cache_mode,
            "cache": cache_mode, "alloc": alloc_mode if cache_mode == "paged"
            else "-", "prefix": "on" if prefix_cache else "-", **r}
     row["spec"] = "on" if spec else "-"
+    row["tail"] = "on" if (wave or swap_mode != "off") else "-"
     return row, warn
 
 
 def _csv(r):
     mesh = f"{r['mesh_shape'][0]}x{r['mesh_shape'][1]}"
     return (f"{r['workload']},{r['quant']},{r['backend']},{r['cache']},"
-            f"{r['alloc']},{r['prefix']},{r['spec']},"
+            f"{r['alloc']},{r['prefix']},{r['spec']},{r.get('tail', '-')},"
             f"{r['pool_pages'] or '-'},{r['requests']},"
             f"{r['slots']},{r['tok_per_s']},{r['req_p50_ms']},"
             f"{r['req_p99_ms']},{r['ttft_p50_ms']},{r['ttft_p99_ms']},"
             f"{r['itl_p50_ms']},{r['itl_p99_ms']},{r['cache_kb_per_req']},"
             f"{r['occupancy']},{r['concurrency']},{r['preemptions']},"
+            f"{r.get('swap_out', 0)},{r.get('swap_in', 0)},"
+            f"{r.get('replay_steps_saved', 0)},"
             f"{r['prefix_hit_rate']},{r['acceptance_rate']},"
             f"{r['tokens_per_step']},{r['compile_s']},"
             f"{r['device_count']},{mesh},{r['dp_replicas']}")
@@ -211,11 +236,15 @@ def run(json_path: str | None = None):
                 if warn:
                     yield warn
                 yield _csv(r)
-    # overcommitted pool: same pool, reserve vs incremental bookkeeping
-    for alloc_mode in ("reserve", "incremental"):
+    # overcommitted pool: same pool, reserve vs incremental bookkeeping,
+    # plus incremental with the host-tier swap — its preemptions resume
+    # by page copy, so swap_out/swap_in fire and replay_steps_saved
+    # shows up as fewer decode-chunk dispatches for the same streams
+    for alloc_mode, swap in (("reserve", "off"), ("incremental", "off"),
+                             ("incremental", "host")):
         r, warn = _bench_one(cfg, params, "dense", "xla", "overcommit",
                              "paged", alloc_mode=alloc_mode,
-                             num_pages=OVERCOMMIT_PAGES)
+                             num_pages=OVERCOMMIT_PAGES, swap_mode=swap)
         rows.append(r)
         if warn:
             yield warn
@@ -245,6 +274,26 @@ def run(json_path: str | None = None):
             if warn:
                 yield warn
             yield _csv(r)
+    # tail-latency pair: the same bursty heavy-tail workload over the
+    # same overcommitted incremental pool, with the tail mechanisms off
+    # (monolithic prefill, replay-resume) vs on (4-token chunked wave
+    # prefill, 4-wide grouped admission, host-tier page swap).  The
+    # p99 TTFT/ITL columns are the headline; swap_out/swap_in/
+    # replay_steps_saved show where the win comes from
+    # 2x the grid's request count: with only 8 requests the p99 columns
+    # are the per-run maximum and burst luck dominates the comparison
+    for tail in (False, True):
+        r, warn = _bench_one(cfg, params, "dense", "xla", "burst_tail",
+                             "paged", alloc_mode="incremental",
+                             num_pages=OVERCOMMIT_PAGES,
+                             arrival_mode="bursty", requests=2 * REQUESTS,
+                             prefill_chunk=4 if tail else 0,
+                             admit_group=4 if tail else 1,
+                             swap_mode="host" if tail else "off")
+        rows.append(r)
+        if warn:
+            yield warn
+        yield _csv(r)
     # mesh trio: the same shared-prefix staggered workload as a
     # single-device baseline, TP-sharded (one engine over a (1, 2)
     # mesh), and DP-replicated (two engines behind the router, with
@@ -277,7 +326,20 @@ def run(json_path: str | None = None):
                     "worst-case bookings, alloc=incremental books pages "
                     "per live token (evict-and-resume preemption when "
                     "the pool runs dry) and sustains more concurrent "
-                    "requests per page of pool. The workload=shared pair "
+                    "requests per page of pool; the third overcommit "
+                    "row adds swap_mode=host — the same preemptions "
+                    "resume by host-tier page copy (swap_out/swap_in), "
+                    "and replay_steps_saved decode steps disappear from "
+                    "the run while the streams stay bit-identical. On "
+                    "this CPU proxy the copy costs more wall-clock than "
+                    "the replay it saves (a tiny model makes replayed "
+                    "decode steps nearly free — they ride along in "
+                    "chunks that run anyway — while the host round-trip "
+                    "pays real per-event dispatches); the counters, not "
+                    "the swap row's tok_per_s, are the transferable "
+                    "signal: at HBM scale each replayed step is a full "
+                    "forward and the copy is O(pages). The "
+                    "workload=shared pair "
                     f"gives {int(SHARED_PREFIX * 100)}% of requests one "
                     "fixed system-prompt head: prefix=on shares its "
                     "pages read-only across requests (refcounted, "
@@ -295,6 +357,20 @@ def run(json_path: str | None = None):
                     "baseline's. bursty arrivals cluster Poisson bursts "
                     "with Pareto heavy-tail prompt lengths at the same "
                     "mean load (ttft_p99_ms / itl percentile columns). "
+                    "The workload=burst_tail pair runs that bursty "
+                    f"workload over the same {OVERCOMMIT_PAGES}-page "
+                    "overcommitted incremental pool with the "
+                    "tail-latency mechanisms off vs on (tail=on: "
+                    "prefill_chunk=4 chunked wave prefill interleaving "
+                    "decode between prompt slices, admit_group=4 "
+                    "grouped admission, swap_mode=host parking evicted "
+                    "slots' KV pages in a host pool so resume is a page "
+                    "copy instead of a token replay) — greedy streams "
+                    "are bit-identical between the two rows, "
+                    "ttft_p99_ms/itl_p99_ms are the headline, and "
+                    "swap_out/swap_in/replay_steps_saved count the swap "
+                    "traffic and the decode steps the page-copy resume "
+                    "did not have to replay. "
                     "Every row records its topology: device_count, "
                     "mesh_shape = the per-engine (data, model) mesh, and "
                     "dp_replicas = engine replicas behind the router "

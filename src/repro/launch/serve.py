@@ -38,6 +38,16 @@ heavy-tail workload:
         --cache-mode paged --alloc-mode incremental \
         --spec-decode --spec-k 4 --spec-quant w8a8_nibble
 
+Tail-latency engineering (chunked prefill and grouped admission through
+one shared wave program, plus a host-tier page swap that makes
+preemption resume an O(pages) copy) on an overcommitted bursty
+workload:
+
+    PYTHONPATH=src python -m repro.launch.serve --arch qwen3-4b \
+        --workload bursty --requests 16 --stagger-ms 50 \
+        --cache-mode paged --alloc-mode incremental --num-pages 24 \
+        --prefill-chunk 8 --admit-group 4 --swap-mode host
+
 Compile time is reported separately from steady-state throughput (a
 warmup pass triggers every compilation before the timed run).
 """
@@ -68,11 +78,17 @@ def _parse_mesh(spec: str | None):
 
 def _build(args, *, reference: bool = False):
     """Build the serving stack for ``args``.  ``reference=True`` builds
-    the single-device baseline (tp=1, dp=1, no mesh) from the same
-    argument set — the comparison target for --verify."""
+    the plain baseline from the same argument set — single-device
+    (tp=1, dp=1, no mesh) AND with every tail-latency mechanism off
+    (monolithic prefill, serialized admission, replay-only resume), so
+    --verify proves chunked/grouped prefill and the host-tier swap
+    against the unmodified engine, not just against themselves."""
     tp = 1 if reference else args.tp
     dp = 1 if reference else args.dp
     mesh_shape = None if reference else _parse_mesh(args.mesh)
+    prefill_chunk = 0 if reference else args.prefill_chunk
+    admit_group = 1 if reference else args.admit_group
+    swap_mode = "off" if reference else args.swap_mode
     cfg = reduced(get_config(args.arch)).replace(quant_mode=args.quant)
     params = model_init(jax.random.PRNGKey(0), cfg)
     max_len = args.prompt_len + args.new_tokens
@@ -94,6 +110,11 @@ def _build(args, *, reference: bool = False):
                        spec_decode=args.spec_decode,
                        spec_k=args.spec_k,
                        spec_quant_mode=args.spec_quant,
+                       prefill_chunk=prefill_chunk,
+                       admit_group=admit_group,
+                       swap_mode=swap_mode,
+                       host_pages=args.host_pages,
+                       prefix_cache_pages=args.prefix_cache_pages,
                        tp=tp,
                        mesh_shape=mesh_shape)
     if dp > 1:
@@ -217,6 +238,15 @@ def run_requests(args, cfg, engine):
     if args.prefix_cache:
         print(f"  prefix cache: hit rate {r['prefix_hit_rate']:.0%} of "
               f"prompt tokens, {r['prefill_tokens']} tokens prefilled")
+    if args.prefill_chunk or args.admit_group > 1:
+        print(f"  wave prefill: {r['prefill_waves']} waves "
+              f"(chunk={args.prefill_chunk or args.prompt_len} "
+              f"group={args.admit_group}), "
+              f"{r['decode_chunks']} decode chunks")
+    if args.swap_mode == "host":
+        print(f"  host swap: {r['swap_out']} out / {r['swap_in']} in, "
+              f"{r['replay_steps_saved']} replay steps saved, "
+              f"{r['prefix_cold_hits']} cold prefix pages promoted")
     if "per_replica" in r:
         for pr in r["per_replica"]:
             print(f"  replica {pr['replica']}: {pr['placed']} placed, "
@@ -311,6 +341,32 @@ def main(argv=None):
                              "lut"],
                     help="draft-side quant mode (default: the engine's "
                          "--quant; the verifier always runs dense)")
+    ap.add_argument("--prefill-chunk", type=int, default=0,
+                    help="chunked prefill: split every prompt into "
+                         "chunks of this many tokens, one chunk per "
+                         "scheduler step interleaved with decode "
+                         "chunks (0 = monolithic one-dispatch prefill; "
+                         "paged cache only)")
+    ap.add_argument("--admit-group", type=int, default=1,
+                    help="grouped admission: up to this many prefilling "
+                         "requests advance per wave as one padded "
+                         "batch through the single wave program "
+                         "(paged cache only)")
+    ap.add_argument("--swap-mode", default="off",
+                    choices=["off", "host"],
+                    help="host = on eviction copy the victim's live KV "
+                         "pages to a host-memory cold pool and restore "
+                         "them on resume (O(pages) copy instead of "
+                         "O(generated) replay); also gives the prefix "
+                         "cache a host cold tier")
+    ap.add_argument("--host-pages", type=int, default=0,
+                    help="host cold-pool capacity in pages for "
+                         "--swap-mode host (0 = twice the device pool)")
+    ap.add_argument("--prefix-cache-pages", type=int, default=0,
+                    help="capacity cap on pages the prefix index may "
+                         "pin; overflow reclaims LRU leaf-first, "
+                         "demoting to the host cold tier when "
+                         "--swap-mode host (0 = uncapped)")
     ap.add_argument("--tp", type=int, default=1,
                     help="tensor-parallel shards per engine: weights and "
                          "paged KV pools shard over a (1, tp) device "

@@ -21,6 +21,7 @@ from typing import Any
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.configs.base import LayerSpec, ModelConfig
 from repro.models.attention import (
@@ -53,7 +54,8 @@ from repro.models.moe import moe_apply, moe_init
 __all__ = ["model_init", "forward", "prefill", "decode_step", "init_caches",
            "init_paged_caches", "merge_slot_caches",
            "merge_slot_paged_caches", "scatter_prefill_paged_caches",
-           "copy_paged_cache_page", "encode", "unrolled_blocks"]
+           "copy_paged_cache_page", "extract_cache_pages",
+           "insert_cache_pages", "encode", "unrolled_blocks"]
 
 # When True, the block stack is a Python loop instead of lax.scan, so the
 # compiled HLO contains every layer body.  Used by the dry-run cost pass:
@@ -604,6 +606,79 @@ def copy_paged_cache_page(caches, src, dst):
         return leaf.at[dst].set(leaf[src])
 
     return jax.tree_util.tree_map_with_path(cp, caches)
+
+
+def extract_cache_pages(caches, pages, pad_to: int | None = None) -> list[dict]:
+    """Copy pool pages ``pages`` out of every sequence-cache pool into
+    host memory: returns one payload per page, a ``{flat_leaf_index:
+    np.ndarray}`` dict covering exactly the sequence leaves (page axis
+    removed — a payload entry is ``(page_size, ...)``, or ``(n_blocks,
+    page_size, ...)`` under the block stack).  This is the preemption
+    swap-out / prefix-demotion primitive: together with
+    :func:`insert_cache_pages` it round-trips a page's rows through a
+    host cold tier bit-exactly (device→host→device is a copy, never a
+    recompute).  Keying payloads by flattened leaf index keeps them
+    structure-free; the restoring engine re-derives block-ness from its
+    own cache tree, which is by construction the same tree.
+
+    ``pad_to`` fixes the gather width by padding the page-id vector
+    with the trash page (id 0): these are eager dispatches, and XLA
+    compiles one kernel per shape — a serving engine pads every call
+    to one width so the whole swap tier costs exactly one compilation
+    (pre-paid at reset), not one per distinct page count mid-run.  The
+    padded rows are dropped before returning."""
+    pages = list(pages)
+    padded = pages + [0] * (max(0, (pad_to or 0) - len(pages)))
+    idx = jnp.asarray(np.asarray(padded, np.int32))
+    leaves = jax.tree_util.tree_flatten_with_path(caches)[0]
+    cols: dict[int, tuple[np.ndarray, bool]] = {}
+    for i, (path, leaf) in enumerate(leaves):
+        key = path[-1].key if hasattr(path[-1], "key") else None
+        if key not in _SEQ_CACHE_KEYS:
+            continue
+        blk = _is_block_leaf(path)
+        gathered = leaf[:, idx] if blk else leaf[idx]
+        cols[i] = (np.asarray(jax.device_get(gathered)), blk)
+    return [{i: (a[:, j] if blk else a[j]) for i, (a, blk) in cols.items()}
+            for j in range(len(pages))]
+
+
+def insert_cache_pages(caches, pages, payloads, pad_to: int | None = None):
+    """Write host page payloads (from :func:`extract_cache_pages`) back
+    into pool pages ``pages`` of every sequence-cache leaf — the swap-in
+    / prefix-promotion dual.  Runs eagerly outside the compiled stages:
+    swaps are rare scheduler events, and page ids are host integers
+    here, not traced values.
+
+    ``pad_to`` pins the scatter width like the extract side: padded
+    entries write zero rows onto the trash page (id 0), which no query
+    ever attends — the same idempotent-write invariant that lets idle
+    slots decode into it."""
+    pages = list(pages)
+    if len(pages) != len(payloads):
+        raise ValueError(f"{len(pages)} pages but {len(payloads)} "
+                         f"payloads")
+    pad = max(0, (pad_to or 0) - len(pages))
+    idx = jnp.asarray(np.asarray(pages + [0] * pad, np.int32))
+    leaves, treedef = jax.tree_util.tree_flatten_with_path(caches)
+    out = []
+    for i, (path, leaf) in enumerate(leaves):
+        key = path[-1].key if hasattr(path[-1], "key") else None
+        if key in _SEQ_CACHE_KEYS and i in payloads[0]:
+            blk = _is_block_leaf(path)
+            rows = np.stack([p[i] for p in payloads],
+                            axis=1 if blk else 0)
+            if pad:
+                shp = list(rows.shape)
+                shp[1 if blk else 0] = pad
+                rows = np.concatenate(
+                    [rows, np.zeros(shp, rows.dtype)], axis=1 if blk else 0)
+            if blk:
+                leaf = leaf.at[:, idx].set(rows.astype(leaf.dtype))
+            else:
+                leaf = leaf.at[idx].set(rows.astype(leaf.dtype))
+        out.append(leaf)
+    return jax.tree_util.tree_unflatten(treedef, out)
 
 
 def decode_step(params, cfg: ModelConfig, token, caches, index, *,

@@ -103,20 +103,54 @@ program.  Concretely:
   keeps ``{"prefill": 1, "draft": 1, "verify": 1}``; the plain decode
   chunk is never built in spec mode).
 
+**Tail latency** (``prefill_chunk`` / ``admit_group`` / ``swap_mode``).
+Three mechanisms bound the scheduler-level stalls heavy traffic hits:
+
+* *Chunked prefill*: with ``prefill_chunk > 0`` (or ``admit_group >
+  1``) admission only books pages and parks the slot in a *prefilling*
+  state; each scheduler step then advances up to ``admit_group`` such
+  slots by one ``prefill_chunk``-token chunk through ONE compiled wave
+  program — ``decode_step`` with an (G, C) token block at per-lane
+  global positions, the same multi-position paged scatter/gather the
+  spec verify forward uses — *before* the running slots' decode chunk.
+  A giant admitted prompt therefore costs running slots one chunk of
+  latency per step instead of one monolithic prefill, and the
+  monolithic prefill program is never built (``compile_counts`` pins
+  ``{"prefill": 0, "prefill_chunk": 1}``).
+* *Grouped admission*: simultaneous arrivals admitted in one window
+  become multiple prefilling slots, and every wave batches up to
+  ``admit_group`` of them into one padded (G, C) dispatch — burst
+  admission costs one program launch, not G serialized batch-1
+  prefills.  Greedy wave streams bit-match monolithic serialized
+  admission (the dense chunk computation is bit-exact; quantized modes
+  are argmax-stable, as everywhere per-tensor activation scales make
+  streams batch-composition-dependent).
+* *Host-tier page swap*: with ``swap_mode="host"`` eviction copies the
+  victim's live KV pages into a ``HostPagePool`` (host RAM, same
+  refcount discipline as the device allocator) and resume copies them
+  back into fresh pages and re-points the table — O(pages) copies
+  replace the O(generated_len) replay decode steps, and the restore is
+  a bit-copy, so even temperature/spec streams resume bit-stable.  The
+  same pool backs the prefix cache's *cold tier*: reclaimed index
+  entries demote to host pages instead of vanishing and promote back
+  on a later hit, giving the index a capacity tier bigger than HBM.
+  A full host pool degrades gracefully to replay-resume / plain
+  reclaim.
+
 Limits (tracked in ROADMAP "Open items"): models with mamba mixers
 prefill at exact prompt length (end-padding would pollute the SSM
 state), which recompiles per distinct prompt length, and cannot draft
 multi-token speculative rounds (conv/SSM state rollback is not a
-page-table operation), so ``spec_decode`` rejects them; resume-after-
-preemption replays the generated tokens through the decode chunk, so a
-preempted request re-pays its generated length in decode steps (a
-page-level swap-out would avoid that); spec streams at temperature > 0
-are distribution-preserving but not bit-stable across preemption (the
-draft model's cache after resume differs from the uninterrupted run's,
-which can shift acceptance boundaries — greedy spec streams stay
-bit-identical); and prompts longer than one chunk still prefill in a
-single dispatch (no chunked prefill), so a very long prompt can stall
-running slots for one prefill's latency.
+page-table operation), so ``spec_decode`` rejects them — and their
+recurrent state is per-slot rather than paged, so chunked/grouped
+prefill and ``swap_mode="host"`` reject them too; resume-after-
+preemption with ``swap_mode="off"`` (the default) still replays the
+generated tokens through the decode chunk, and spec streams at
+temperature > 0 are then distribution-preserving but not bit-stable
+across preemption (the draft model's cache after resume differs from
+the uninterrupted run's, which can shift acceptance boundaries —
+greedy spec streams stay bit-identical; ``swap_mode="host"`` removes
+the replay, and with it this caveat, whenever the host tier has room).
 
 ``make_serve_step`` remains the single-token jit-able step the decode
 dry-run cells lower.
@@ -137,7 +171,9 @@ from repro.configs.base import ModelConfig, spec_split
 from repro.models import (
     copy_paged_cache_page,
     decode_step,
+    extract_cache_pages,
     init_caches,
+    insert_cache_pages,
     merge_slot_caches,
     merge_slot_paged_caches,
     prefill,
@@ -145,6 +181,7 @@ from repro.models import (
 )
 from repro.models.transformer import _SEQ_CACHE_KEYS
 from repro.serve.paging import (
+    HostPagePool,
     PageAllocator,
     PageTable,
     PrefixCache,
@@ -217,6 +254,44 @@ class ServeConfig:
     #   for itself).  The verifier always runs dense — in spec mode the
     #   engine pins its prefill/verify config to quant_mode="dense" and
     #   the quant knobs configure the *draft* program only.
+    prefill_chunk: int = 0            # chunked prefill: > 0 splits every
+    #   admitted prompt into chunks of this many tokens, one chunk per
+    #   scheduler step through a single compiled wave program
+    #   (interleaved with running slots' decode chunks, so a long
+    #   prompt bounds other slots' ITL impact to one chunk's latency).
+    #   0 keeps the classic monolithic one-dispatch prefill — unless
+    #   ``admit_group > 1``, which also enables the wave program with
+    #   chunk width ``prefill_len``.  Paged cache only; incompatible
+    #   with mamba mixers (chunk boundaries are cache positions, not
+    #   recurrent state) and the int8 KV cache.
+    admit_group: int = 1              # grouped admission: up to this
+    #   many prefilling slots advance per wave as one padded (G, chunk)
+    #   batch — a simultaneous burst costs one program launch instead of
+    #   G serialized batch-1 prefills.  The group budget is fixed, so
+    #   the wave program compiles exactly once.  > 1 requires the paged
+    #   cache and (when ``prefill_chunk`` is 0) a ``prefill_len`` budget
+    #   to serve as the wave width.
+    swap_mode: str = "off"            # "host": on eviction copy the
+    #   victim's live KV pages to a host-memory cold pool
+    #   (``HostPagePool``) and restore them on resume — preemption
+    #   resume becomes an O(pages) copy instead of an
+    #   O(generated_len) replay, and the restore is a bit-copy, so
+    #   sampled/spec streams also resume bit-stable.  The same pool
+    #   gives the prefix cache a cold tier: reclaimed entries demote to
+    #   host pages and promote back on a later hit.  A full host pool
+    #   falls back to replay-resume.  "off" keeps replay-only resume.
+    #   Paged cache only; incompatible with mamba mixers (recurrent
+    #   state is per-slot, not paged — a restore cannot rebuild it).
+    host_pages: int = 0               # host cold-pool capacity in pages
+    #   for ``swap_mode="host"``; 0 = twice the device pool's
+    #   allocatable capacity (host RAM is the bigger tier by design).
+    prefix_cache_pages: int = 0       # capacity cap on pages the prefix
+    #   index may pin: after every insert the index reclaims (LRU
+    #   leaf-first, demoting to the cold tier when one is attached)
+    #   down to this budget instead of only under pool pressure.
+    #   Best-effort: entries whose page a live slot still maps are not
+    #   reclaimable and may hold the index above the cap until that
+    #   slot finishes.  0 = uncapped (pressure-driven reclaim only).
     tp: int = 1                       # tensor-parallel width: shard the
     #   weights (param_specs rules) and the paged KV/scale pools'
     #   KV-head dimension (cache_specs paged rules; in-page sequence
@@ -261,6 +336,13 @@ class Request:
     #   of the prompt's page-aligned chunks (computed on first admission
     #   probe; the prompt is immutable, and admission re-plans several
     #   times per placement)
+    swap_pages: list | None = None    # host page ids holding this
+    #   request's swapped-out KV rows while it waits re-admission
+    #   (``swap_mode="host"``); None = resume replays instead
+    swap_rows: int = 0                # live cache rows captured at
+    #   swap-out (= the slot's decode position then); tokens beyond
+    #   ``swap_rows - len(prompt) + 1`` were not yet written back and
+    #   re-enter the teacher-forcing lane on resume
 
     @property
     def text_len(self) -> int:
@@ -537,6 +619,61 @@ class Engine:
             # (acceptance is defined against the dense model's output)
             self._draft_cfg, self.cfg = spec_split(self.cfg,
                                                    scfg.spec_quant_mode)
+        if scfg.prefill_chunk < 0:
+            raise ValueError(f"prefill_chunk must be >= 0, got "
+                             f"{scfg.prefill_chunk}")
+        if scfg.admit_group < 1:
+            raise ValueError(f"admit_group must be >= 1, got "
+                             f"{scfg.admit_group}")
+        if scfg.swap_mode not in ("off", "host"):
+            raise ValueError(f"swap_mode must be 'off' or 'host', got "
+                             f"{scfg.swap_mode!r}")
+        if scfg.host_pages < 0:
+            raise ValueError(f"host_pages must be >= 0, got "
+                             f"{scfg.host_pages}")
+        if scfg.prefix_cache_pages < 0:
+            raise ValueError(f"prefix_cache_pages must be >= 0, got "
+                             f"{scfg.prefix_cache_pages}")
+        # wave mode: chunked and/or grouped prefill through one shared
+        # (G, C) decode-step program at explicit global positions; the
+        # monolithic prefill stage is then never built, so its pinned
+        # compile count is 0 (see ``compile_counts``)
+        self._wave = scfg.prefill_chunk > 0 or scfg.admit_group > 1
+        if self._wave:
+            if not self._paged:
+                raise ValueError("prefill_chunk/admit_group require "
+                                 "cache_mode='paged': the wave program "
+                                 "writes prompt rows through page-table "
+                                 "rows, not a dense slab")
+            if self._has_mamba:
+                raise ValueError("prefill_chunk/admit_group are "
+                                 "incompatible with mamba-mixer models: "
+                                 "chunk boundaries are cache positions, "
+                                 "and recurrent state has none")
+            if self.cfg.kv_cache_dtype == "int8":
+                raise ValueError("prefill_chunk/admit_group are "
+                                 "incompatible with kv_cache_dtype="
+                                 "'int8': earlier chunks are attended "
+                                 "dequantized while a monolithic "
+                                 "prefill attends full precision, "
+                                 "breaking the bit-match contract")
+            self._wave_chunk = scfg.prefill_chunk or scfg.prefill_len
+            if self._wave_chunk < 1:
+                raise ValueError("admit_group > 1 with prefill_chunk=0 "
+                                 "needs prefill_len > 0 to serve as the "
+                                 "wave width")
+            self._wave_group = scfg.admit_group
+        self._swap = scfg.swap_mode == "host"
+        if self._swap:
+            if not self._paged:
+                raise ValueError("swap_mode='host' requires "
+                                 "cache_mode='paged': the dense slab "
+                                 "has no pages to swap")
+            if self._has_mamba:
+                raise ValueError("swap_mode='host' is incompatible with "
+                                 "mamba-mixer models: recurrent state "
+                                 "is per-slot, not paged, so a page "
+                                 "restore cannot rebuild it")
         # TP mesh: built before the compiled stages so their explicit
         # in/out shardings can reference the sharded param/cache trees
         # (None = no mesh, the single-device engine — every jit is then
@@ -550,10 +687,17 @@ class Engine:
         # return value, so the update happens in place instead of
         # copying every unmodified row (the out_shardings under a mesh
         # match the donated input's, so donation still applies)
-        n_pre = 10 if scfg.prefix_cache else 7
-        self._prefill_fn = _CountingJit(self._build_prefill(),
-                                        donate_argnums=1,
-                                        **self._stage_shardings(n_pre, 2))
+        if self._wave:
+            self._prefill_fn = None
+            self._wave_fn = _CountingJit(self._build_wave_prefill(),
+                                         donate_argnums=1,
+                                         **self._stage_shardings(9, 2))
+        else:
+            self._wave_fn = None
+            n_pre = 10 if scfg.prefix_cache else 7
+            self._prefill_fn = _CountingJit(
+                self._build_prefill(), donate_argnums=1,
+                **self._stage_shardings(n_pre, 2))
         if self._spec:
             # exactly two decode-side programs — one quantized draft,
             # one dense verify; _chunk_fn is never built or called, so
@@ -714,6 +858,43 @@ class Engine:
             return caches, first
 
         return prefill_into_slot
+
+    def _build_wave_prefill(self):
+        """The wave program: one compiled stage advances up to
+        ``admit_group`` prefilling slots by one prompt chunk each —
+        chunked prefill and grouped admission are the same dispatch at
+        different (G, C) fill levels.  Built on the multi-position
+        ``decode_step`` path (per-position causal masking +
+        scatter-before-gather through the page table), so chunk rows are
+        bit-identical to a monolithic prefill's; every composition of
+        chunk width and lane occupancy reuses this one program because
+        lengths, start positions, table rows and COW pairs are all data,
+        not shape."""
+        cfg, scfg = self.cfg, self.scfg
+        sample = _slot_sampler(scfg)
+
+        def wave(params, caches, tokens, lens, starts, rows, cow_src,
+                 cow_dst, keys):
+            """tokens: (G, C) prompt chunks, zero-padded; lens: (G,)
+            real widths; starts: (G,) each chunk's global position;
+            rows: (G, max_pages) page-table rows (all-trash for pad
+            lanes, so their writes are harmless); cow_src/cow_dst: (G,)
+            shared-tail duplication pairs applied before any write (the
+            no-COW default 0/0 rewrites the trash page with itself);
+            keys: (G, 2) per-request stream keys — the first-token draw
+            folds in stream index 0, exactly the monolithic prefill's
+            draw.  Returns the updated caches and each lane's sampled
+            first token — meaningful only for lanes whose chunk
+            completed the prompt."""
+            caches = copy_paged_cache_page(caches, cow_src, cow_dst)
+            logits, caches = decode_step(params, cfg, tokens, caches,
+                                         starts, page_table=rows)
+            last = jnp.take_along_axis(
+                logits, (lens - 1)[:, None, None], axis=1)[:, 0]
+            sub = jax.vmap(lambda k: jax.random.fold_in(k, 0))(keys)
+            return caches, sample(last, sub)
+
+        return wave
 
     def _build_decode_chunk(self):
         cfg, scfg = self.cfg, self.scfg
@@ -947,16 +1128,54 @@ class Engine:
         self._prefix_hits = 0
         self._cached_prompt_tokens = 0
         self._total_prompt_tokens = 0
+        # tail-latency accounting: wave/chunk dispatch counts, host-tier
+        # swap traffic, and the decode steps a swap-in did NOT have to
+        # replay (= generated rows restored by page copy)
+        self.prefill_waves = 0
+        self.decode_chunks = 0
+        self.swap_outs = 0
+        self.swap_ins = 0
+        self.replay_steps_saved = 0
+        self.prefix_demotions = 0
+        self.prefix_cold_hits = 0
+        self.prefix_capacity_reclaims = 0
+        # wave-mode per-slot prefill cursor: next prompt position to
+        # run, -1 = not prefilling; _slot_cow holds each lane's pending
+        # (cow_src, cow_dst) pair until its final chunk applies it
+        self._prefill_next = np.full((b,), -1, np.int64)
+        self._slot_cow: list[tuple[int, int]] = [(0, 0)] * b
         self.prefix_cache: PrefixCache | None = None
+        self.host_pool: HostPagePool | None = None
         if self._paged:
             self.allocator = PageAllocator(self._num_pages, reserved=1)
             self.page_table = PageTable(b, self._max_pages, trash_page=0,
                                         num_pages=self._num_pages,
                                         reserved=1)
             self._slot_pages: list[list[int] | None] = [None] * b
+            if self._swap:
+                self.host_pool = HostPagePool(
+                    self.scfg.host_pages or 2 * self.allocator.capacity)
+                # every host-tier extract/insert pads its page vector to
+                # one fixed width (the per-slot maximum), so the eager
+                # gather/scatter pair compiles exactly one shape — and
+                # that compile is pre-paid here, on a trash-page
+                # round-trip, instead of inside the serving loop at the
+                # first preemption
+                self._swap_pad = self._max_pages
+                warm = extract_cache_pages(self._caches, [0],
+                                           pad_to=self._swap_pad)
+                self._caches = insert_cache_pages(self._caches, [0], warm,
+                                                  pad_to=self._swap_pad)
+                if self._mesh is not None:
+                    self._caches = jax.device_put(self._caches,
+                                                  self._cache_sh)
             if self.scfg.prefix_cache:
                 self.prefix_cache = PrefixCache(self._page_size,
                                                 self.allocator)
+                if self.host_pool is not None:
+                    self.prefix_cache.attach_cold_tier(
+                        self._demote_page,
+                        lambda hid: self.host_pool.free([hid]))
         else:
             # dense mode ships an all-zero dummy table so the chunk
             # signature (and its single compilation) is layout-invariant
@@ -975,12 +1194,19 @@ class Engine:
         replaces the chunk with the draft-side pair and runs exactly
         ``{"prefill": 1, "decode_chunk": 0, "draft": 1, "verify": 1}``
         — one quantized draft program, one dense multi-token verify
-        program, and the chunk program never built or called.  Any
-        other value is a recompile bug (``benchmarks/serve_bench.py``
-        raises on deviation)."""
-        counts = {"prefill": self._prefill_fn.compile_count,
+        program, and the chunk program never built or called.  Wave
+        mode (``prefill_chunk``/``admit_group``) replaces the
+        monolithic prefill with the wave program and runs exactly
+        ``{"prefill": 0, "decode_chunk": 1, "prefill_chunk": 1}`` —
+        every chunk width, lane occupancy and prefix-hit mix hits the
+        same (G, C) signature.  Any other value is a recompile bug
+        (``benchmarks/serve_bench.py`` raises on deviation)."""
+        counts = {"prefill": (self._prefill_fn.compile_count
+                              if self._prefill_fn is not None else 0),
                   "decode_chunk": (self._chunk_fn.compile_count
                                    if self._chunk_fn is not None else 0)}
+        if self._wave:
+            counts["prefill_chunk"] = self._wave_fn.compile_count
         if self._spec:
             counts["draft"] = self._draft_fn.compile_count
             counts["verify"] = self._verify_fn.compile_count
@@ -1024,7 +1250,25 @@ class Engine:
                                     / max(1, self.spec_proposed)),
                 "tokens_per_step": (self.spec_tokens
                                     / max(1, self.spec_slot_rounds)),
-                "spec_rollback_pages": self.spec_rollback_pages}
+                "spec_rollback_pages": self.spec_rollback_pages,
+                # tail-latency counters: prefill_waves/decode_chunks =
+                # program dispatches per stage; swap_out/swap_in =
+                # host-tier page-swap events; replay_steps_saved =
+                # decode rows restored by page copy instead of replay;
+                # prefix_cold_* = cold-tier demotions and promoted-hit
+                # pages (both 0 with the mechanisms off)
+                "prefill_waves": self.prefill_waves,
+                "decode_chunks": self.decode_chunks,
+                "swap_out": self.swap_outs,
+                "swap_in": self.swap_ins,
+                "replay_steps_saved": self.replay_steps_saved,
+                "host_pages": (self.host_pool.capacity
+                               if self.host_pool is not None else 0),
+                "prefix_cold_pages": (self.prefix_cache.cold_size
+                                      if self.prefix_cache is not None
+                                      else 0),
+                "prefix_cold_hits": self.prefix_cold_hits,
+                "prefix_demotions": self.prefix_demotions}
 
     @property
     def cache_token_bytes(self) -> int:
@@ -1052,13 +1296,66 @@ class Engine:
         """Pages booked at admission: the worst case in reserve mode;
         the prompt pages plus the first decode page in incremental mode
         (later pages arrive via per-chunk top-up — resumed requests
-        regrow the same way while their tokens replay)."""
+        regrow the same way while their tokens replay).  A swapped-out
+        request restores ``swap_rows`` live rows by page copy and then
+        writes its next decode row, so incremental mode books exactly
+        those; reserve mode keeps the worst case, which covers the
+        swapped rows by construction (they were live under the same
+        booking before eviction)."""
         if not self._incremental:
             return self._pages_for(req)
+        if req.swap_pages is not None:
+            return pages_needed(req.swap_rows + 1, self._page_size)
         rows = len(req.prompt)
         if req.max_new_tokens > 1:
             rows += 1                 # first decode write lands at row p_len
         return pages_needed(rows, self._page_size)
+
+    # ------------------------------------------------------------------
+    # host cold tier (swap_mode="host")
+    # ------------------------------------------------------------------
+
+    def _demote_page(self, page: int) -> int | None:
+        """Prefix-cache demotion hook: copy one reclaimed device page
+        into a fresh host page, returning its id (``None`` when the
+        host pool is full — the caller then evicts its own oldest cold
+        entry and retries, or drops the chunk outright)."""
+        hids = self.host_pool.alloc(1)
+        if hids is None:
+            return None
+        self.host_pool.store(
+            hids[0], extract_cache_pages(self._caches, [page],
+                                         pad_to=self._swap_pad)[0])
+        self.prefix_demotions += 1
+        return hids[0]
+
+    def _promote_cold(self, keys: list, pages: list) -> None:
+        """Load a run of cold prefix chunks back into freshly allocated
+        device pages (which admission has already mapped behind the hot
+        prefix, so global row order is preserved) and insert them into
+        the hot index under their original chain keys."""
+        hids = self.prefix_cache.pop_cold(keys)
+        payloads = [self.host_pool.load(h) for h in hids]
+        self._caches = insert_cache_pages(self._caches, pages, payloads,
+                                          pad_to=self._swap_pad)
+        if self._mesh is not None:
+            # the eager scatter may drop the committed sharding; re-pin
+            # before the next donating dispatch sees a layout mismatch
+            self._caches = jax.device_put(self._caches, self._cache_sh)
+        self.host_pool.free(hids)
+        self.prefix_cold_hits += len(pages)
+
+    def _prefix_insert(self, keys: list, pages: list) -> None:
+        """Index a prompt's chunk chain, then enforce the optional
+        ``prefix_cache_pages`` capacity cap: reclaim (LRU leaf-first,
+        demoting to the cold tier when attached) down to the budget.
+        Best-effort — pages still mapped by live slots are pinned and
+        may hold the index above the cap until their slot finishes."""
+        self.prefix_cache.insert(keys, pages)
+        cap = self.scfg.prefix_cache_pages
+        if cap and len(self.prefix_cache) > cap:
+            self.prefix_capacity_reclaims += self.prefix_cache.reclaim(
+                len(self.prefix_cache) - cap)
 
     def validate(self, prompt, max_new_tokens: int):
         """Submit-time validation, shared with the router (which must
@@ -1115,29 +1412,40 @@ class Engine:
     # ------------------------------------------------------------------
 
     def _prefix_plan(self, req: Request):
-        """(chunk_keys, shared_pages, cow_src, start) for the longest
-        usable cached prefix of ``req.prompt``.  Read-only (no refs
-        taken): ``_can_admit`` probes it, ``_place`` re-derives it and
-        acquires.  A fully covered prompt caps sharing at every page
-        but keeps the tail as ``cow_src``: the last token must still
-        run through the model for its logits, and its KV write needs a
-        private copy-on-write page."""
+        """(chunk_keys, shared_pages, cow_src, start, n_cold) for the
+        longest usable cached prefix of ``req.prompt``.  Read-only (no
+        refs taken, no promotions): ``_can_admit`` probes it,
+        ``_place`` re-derives it and acquires.  A fully covered prompt
+        caps sharing at every page but keeps the tail as ``cow_src``:
+        the last token must still run through the model for its logits,
+        and its KV write needs a private copy-on-write page.  With a
+        cold tier attached, ``n_cold`` chunks demoted to host pages
+        extend the hot run and are promoted into fresh device pages at
+        placement — except a cold *tail* chunk that would fully cover
+        the prompt, which is cheaper to re-prefill than to promote and
+        then COW-duplicate."""
         if req.chunk_keys is None:
             req.chunk_keys = self.prefix_cache.chunk_keys(req.prompt)
         keys = req.chunk_keys
         hits = self.prefix_cache.match(keys)
         p_len = int(req.prompt.size)
         if hits and len(hits) * self._page_size == p_len:
-            return keys, hits[:-1], hits[-1], p_len - 1
-        return keys, hits, 0, len(hits) * self._page_size
+            return keys, hits[:-1], hits[-1], p_len - 1, 0
+        n_cold = self.prefix_cache.match_cold(keys, len(hits))
+        if n_cold and (len(hits) + n_cold) * self._page_size == p_len:
+            n_cold -= 1
+        start = (len(hits) + n_cold) * self._page_size
+        return keys, hits, 0, start, n_cold
 
     def _admission_pages(self, req: Request) -> int:
         """Fresh pages admission must allocate: the booked count minus
-        pages served read-only from the prefix cache."""
+        pages served read-only from the prefix cache.  A swapped-out
+        request restores its own private pages — the prefix plan does
+        not apply (its prompt pages come back by copy, not mapping)."""
         booked = self._alloc_pages_for(req)
-        if self.prefix_cache is None:
+        if self.prefix_cache is None or req.swap_pages is not None:
             return booked
-        _, shared, _, _ = self._prefix_plan(req)
+        _, shared, _, _, _ = self._prefix_plan(req)
         return booked - len(shared)
 
     def _can_admit(self, req: Request) -> bool:
@@ -1152,8 +1460,11 @@ class Engine:
         if self.allocator.can_alloc(need):
             return True
         if self.prefix_cache is not None:
-            _, shared, cow_src, _ = self._prefix_plan(req)
-            keep = set(shared) | ({cow_src} if cow_src else set())
+            if req.swap_pages is not None:
+                keep = set()
+            else:
+                _, shared, cow_src, _, _ = self._prefix_plan(req)
+                keep = set(shared) | ({cow_src} if cow_src else set())
             self.prefix_cache.reclaim(need - self.allocator.available,
                                       keep=keep)
         return self.allocator.can_alloc(need)
@@ -1186,6 +1497,31 @@ class Engine:
             # requeued request carries the full generated stream
             req.tokens.extend(self._slot_forced[slot])
             self._slot_forced[slot] = []
+        if self._wave and self._prefill_next[slot] >= 0:
+            # evicted mid-prefill: nothing generated yet — drop the
+            # partial chunk rows with the pages and restart the prompt
+            # on re-admission
+            self._prefill_next[slot] = -1
+            self._slot_cow[slot] = (0, 0)
+        elif self._swap and req.tokens and self._slot_pages[slot]:
+            # host-tier swap: copy the live KV rows out so resume is an
+            # O(pages) restore instead of an O(generated) replay.  The
+            # slot's decode position — not len(tokens) — is the row
+            # count: a mid-replay victim carries spliced tokens whose
+            # rows were never rebuilt yet.  A full host pool silently
+            # falls back to replay-resume.
+            rows = int(self._positions[slot])
+            hids = self.host_pool.alloc(
+                pages_needed(rows, self._page_size))
+            if hids is not None:
+                payloads = extract_cache_pages(
+                    self._caches, self._slot_pages[slot][:len(hids)],
+                    pad_to=self._swap_pad)
+                for h, pl in zip(hids, payloads):
+                    self.host_pool.store(h, pl)
+                req.swap_pages = hids
+                req.swap_rows = rows
+                self.swap_outs += 1
         if self._paged and self._slot_pages[slot] is not None:
             self.allocator.free(self._slot_pages[slot])
             self._slot_pages[slot] = None
@@ -1278,13 +1614,19 @@ class Engine:
         takes its own page references so they outlive this request.
         Returns the first-token logits sample."""
         p_len = int(req.prompt.size)
-        keys, shared, cow_src, start = self._prefix_plan(req)
+        keys, shared, cow_src, start, n_cold = self._prefix_plan(req)
         shared = self.prefix_cache.acquire(keys[:len(shared)])
         fresh = self.allocator.alloc(self._alloc_pages_for(req)
                                      - len(shared))
         if fresh is None:             # _can_admit vouched for this plan
             raise RuntimeError("page pool changed between admission "
                                "check and placement")
+        if n_cold:
+            # promote the cold run into the first fresh pages — they
+            # sit right behind the hot prefix in the table row, so the
+            # restored rows land at their original global positions
+            self._promote_cold(keys[len(shared):len(shared) + n_cold],
+                               fresh[:n_cold])
         cow_dst = fresh[0] if cow_src else 0
         pages = shared + fresh
         self.page_table.assign(slot, pages, shared=set(shared))
@@ -1305,10 +1647,10 @@ class Engine:
             self.params, self._caches, jnp.asarray(padded), sfx_len,
             slot, jnp.asarray(self.page_table.row(slot)), start,
             cow_src, cow_dst, rng)
-        self.prefix_cache.insert(keys, pages)
+        self._prefix_insert(keys, pages)
         self.prefill_tokens += sfx_len
         self._cached_prompt_tokens += start
-        self._prefix_hits += bool(shared or cow_src)
+        self._prefix_hits += bool(shared or n_cold or cow_src)
         self.cow_copies += bool(cow_src)
         return first
 
@@ -1321,7 +1663,6 @@ class Engine:
         uninterrupted run."""
         p_len = int(req.prompt.size)
         resumed = bool(req.tokens)
-        self._total_prompt_tokens += p_len
         # index-derived stream key: the same request always gets the
         # same key, whether fresh or re-admitted after a preemption.
         # The prefill's first-token draw is stream index 0.
@@ -1331,6 +1672,18 @@ class Engine:
                              np.uint32)
             self._req_keys[req.id] = key
         self._slot_keys[slot] = key
+        if req.swap_pages is not None:
+            # O(pages) resume: restore the swapped rows by copy — no
+            # prefill, no replay (the prompt tokens were counted at the
+            # original admission)
+            self._swap_in(slot, req)
+            return
+        self._total_prompt_tokens += p_len
+        if self._wave:
+            # wave mode: map pages now, then advance one chunk per
+            # scheduler step through the shared wave program
+            self._wave_admit(slot, req)
+            return
         sub = jax.random.fold_in(jnp.asarray(key), 0)
         if self.prefix_cache is not None:
             first = self._prefix_place(slot, req, sub)
@@ -1374,6 +1727,178 @@ class Engine:
             self._slots[slot] = req
             self._token[slot, 0] = tok
             self._positions[slot] = p_len
+            self._active[slot] = True
+            self._remaining[slot] = req.max_new_tokens - 1
+
+    def _swap_in(self, slot: int, req: Request) -> None:
+        """Resume a swapped-out request by page copy: restore its live
+        KV rows from the host tier into freshly allocated device pages
+        and re-point the slot's table row — O(pages) host↔device
+        traffic in place of O(generated) replayed decode steps.  The
+        restore is a bit-copy, so the resumed stream (greedy, sampled
+        or speculative) continues exactly where it stopped; tokens
+        emitted but never written back re-enter the teacher-forcing
+        lane as usual."""
+        p_len = int(req.prompt.size)
+        pages = self.allocator.alloc(self._alloc_pages_for(req))
+        if pages is None:             # _can_admit vouched for this plan
+            raise RuntimeError("page pool changed between admission "
+                               "check and placement")
+        n = len(req.swap_pages)
+        payloads = [self.host_pool.load(h) for h in req.swap_pages]
+        self._caches = insert_cache_pages(self._caches, pages[:n],
+                                          payloads, pad_to=self._swap_pad)
+        if self._mesh is not None:
+            # the eager scatter may drop the committed sharding; re-pin
+            # before the next donating dispatch sees a layout mismatch
+            self._caches = jax.device_put(self._caches, self._cache_sh)
+        self.host_pool.free(req.swap_pages)
+        req.swap_pages = None
+        self.page_table.assign(slot, pages)
+        self._slot_pages[slot] = pages
+        req.cache_rows = max(req.cache_rows,
+                             len(pages) * self._page_size)
+        # rows [0, swap_rows) are restored; tokens past the last one
+        # written back replay through the forced lane, and the stream
+        # resumes at the position the eviction interrupted
+        committed = req.swap_rows - p_len + 1
+        self._slot_forced[slot] = list(req.tokens[committed:])
+        req.tokens = req.tokens[:committed]
+        self._slots[slot] = req
+        self._token[slot, 0] = int(req.tokens[-1])
+        self._positions[slot] = req.swap_rows
+        self._active[slot] = True
+        self._remaining[slot] = req.max_new_tokens - committed
+        self.swap_ins += 1
+        self.replay_steps_saved += req.swap_rows - p_len
+        req.swap_rows = 0
+
+    def _wave_admit(self, slot: int, req: Request) -> None:
+        """Wave-mode admission: allocate and map the request's pages
+        now, but run no model code — the slot parks as an inactive
+        *prefilling* lane (``_prefill_next`` ≥ 0) and advances one
+        prompt chunk per scheduler step through the shared wave
+        program.  Frozen-slot safety: the lane's decode position parks
+        at ``max_len - 1``, whose garbage rewrites land past every row
+        a prompt chunk attends and are overwritten by the slot's own
+        decode before they could ever be read."""
+        p_len = int(req.prompt.size)
+        cow = (0, 0)
+        start = 0
+        if self.prefix_cache is not None:
+            keys, shared, cow_src, start, n_cold = self._prefix_plan(req)
+            shared = self.prefix_cache.acquire(keys[:len(shared)])
+            fresh = self.allocator.alloc(self._alloc_pages_for(req)
+                                         - len(shared))
+            if fresh is None:         # _can_admit vouched for this plan
+                raise RuntimeError("page pool changed between admission "
+                                   "check and placement")
+            if n_cold:
+                self._promote_cold(
+                    keys[len(shared):len(shared) + n_cold],
+                    fresh[:n_cold])
+            if cow_src:
+                cow = (cow_src, fresh[0])
+            pages = shared + fresh
+            self.page_table.assign(slot, pages, shared=set(shared))
+            self._cached_prompt_tokens += start
+            self._prefix_hits += bool(shared or n_cold or cow_src)
+        else:
+            pages = self.allocator.alloc(self._alloc_pages_for(req))
+            if pages is None:
+                raise RuntimeError("page pool changed between admission "
+                                   "check and placement")
+            self.page_table.assign(slot, pages)
+        self._slot_pages[slot] = pages
+        req.cache_rows = max(req.cache_rows,
+                             len(pages) * self._page_size)
+        self._slots[slot] = req
+        self._prefill_next[slot] = start
+        self._slot_cow[slot] = cow
+        self._slot_forced[slot] = []
+        self._token[slot, 0] = 0
+        self._positions[slot] = self.scfg.max_len - 1
+        self._active[slot] = False
+        self._remaining[slot] = 0
+
+    def _run_wave(self, now: float) -> None:
+        """One wave: advance up to ``admit_group`` prefilling lanes by
+        one prompt chunk each through the single compiled wave program.
+        Pad lanes ride along as no-ops (all-trash table rows, so their
+        writes are harmless); a lane whose chunk completes its prompt
+        samples its first token and unfreezes into decode."""
+        G, C = self._wave_group, self._wave_chunk
+        lanes = [s for s in range(self.scfg.batch)
+                 if self._prefill_next[s] >= 0][:G]
+        tokens = np.zeros((G, C), np.int32)
+        lens = np.ones((G,), np.int32)
+        starts = np.zeros((G,), np.int32)
+        rows = np.zeros((G, self._max_pages), np.int32)
+        cow_src = np.zeros((G,), np.int32)
+        cow_dst = np.zeros((G,), np.int32)
+        keys = np.zeros((G, 2), np.uint32)
+        real = []
+        for i, s in enumerate(lanes):
+            req = self._slots[s]
+            st = int(self._prefill_next[s])
+            p_len = int(req.prompt.size)
+            n = min(C, p_len - st)
+            tokens[i, :n] = req.prompt[st:st + n]
+            lens[i] = n
+            starts[i] = st
+            rows[i] = self.page_table.row(s)
+            cs, cd = self._slot_cow[s]
+            if cs and st + n == p_len:
+                # the COW pair applies with the final chunk — the only
+                # one that writes into the duplicated tail page
+                cow_src[i], cow_dst[i] = cs, cd
+                self.cow_copies += 1
+            keys[i] = self._slot_keys[s]
+            real.append(n)
+            self.prefill_tokens += n
+        self.prefill_waves += 1
+        self._caches, first = self._wave_fn(
+            self.params, self._caches, jnp.asarray(tokens),
+            jnp.asarray(lens), jnp.asarray(starts), jnp.asarray(rows),
+            jnp.asarray(cow_src), jnp.asarray(cow_dst),
+            jnp.asarray(keys))
+        first = np.asarray(first)
+        for i, s in enumerate(lanes):
+            req = self._slots[s]
+            nxt = int(self._prefill_next[s]) + real[i]
+            if nxt >= int(req.prompt.size):
+                self._wave_finish(s, req, int(first[i]))
+            else:
+                self._prefill_next[s] = nxt
+
+    def _wave_finish(self, slot: int, req: Request, first: int) -> None:
+        """A lane's final chunk ran: index the prompt's pages (prefix
+        cache), commit the first token and unfreeze the slot — the
+        exact epilogue of a monolithic placement, shared verbatim so
+        wave and monolithic admissions are indistinguishable
+        downstream."""
+        self._prefill_next[slot] = -1
+        self._slot_cow[slot] = (0, 0)
+        if self.prefix_cache is not None:
+            self._prefix_insert(req.chunk_keys, self._slot_pages[slot])
+        if req.tokens:                # resumed: replay, don't resample
+            tok = req.tokens[0]
+            self._slot_forced[slot] = req.tokens[1:]
+            req.tokens = [tok]
+        else:
+            self._slot_forced[slot] = []
+            tok = first
+            req.tokens.append(tok)
+            req.t_first = time.perf_counter() - self._t0
+            req.t_tokens.append(req.t_first)
+        done = (req.max_new_tokens <= 1
+                or (self.scfg.eos_id >= 0 and tok == self.scfg.eos_id))
+        if done:
+            self._finish(req, slot)
+            self._slots[slot] = None
+        else:
+            self._token[slot, 0] = tok
+            self._positions[slot] = int(req.prompt.size)
             self._active[slot] = True
             self._remaining[slot] = req.max_new_tokens - 1
 
@@ -1454,6 +1979,7 @@ class Engine:
                 del buf[:n]
         self._stat_samples += 1
         self._stat_running += sum(r is not None for r in self._slots)
+        self.decode_chunks += 1
         if self._paged:
             self._stat_in_use += self.allocator.in_use
         counts = np.asarray(
@@ -1628,7 +2154,11 @@ class Engine:
             return False
         now = time.perf_counter() - self._t0
         self._admit(now)
-        if not self._active.any():
+        # wave mode: slots mid-prefill are inactive but NOT idle — they
+        # make progress through _run_wave below, so neither the idle
+        # sleep nor the stall check may fire while any lane prefills
+        prefilling = self._wave and bool((self._prefill_next >= 0).any())
+        if not self._active.any() and not prefilling:
             if not len(self._queue):
                 return False           # drained this iteration
             nxt = self._queue.next_arrival()
@@ -1660,15 +2190,26 @@ class Engine:
                           f"{self.allocator.available} free of "
                           f"{self.allocator.capacity} "
                           f"allocatable)")
+                if self.host_pool is not None:
+                    swapped = sum(
+                        1 for e in self._queue._heap
+                        if e[3].swap_pages is not None)
+                    detail += (f" [host tier: "
+                               f"{self.host_pool.in_use}/"
+                               f"{self.host_pool.capacity} pages held, "
+                               f"{swapped} swapped request(s) queued]")
             raise RuntimeError(
                 f"serve scheduler stalled: {len(self._queue)} "
                 f"arrived request(s) cannot be admitted with "
                 f"all slots idle{detail}")
         now = time.perf_counter() - self._t0
-        if self._spec:
-            self._run_spec_round(now)
-        else:
-            self._run_chunk(now)
+        if prefilling:
+            self._run_wave(now)
+        if self._active.any():
+            if self._spec:
+                self._run_spec_round(now)
+            else:
+                self._run_chunk(now)
         return True
 
     def drain(self) -> dict[int, Request]:
@@ -1695,9 +2236,14 @@ class Engine:
     def leaked_pages(self) -> int:
         """Pages still held after a drained engine has released every
         legitimate holder (call ``release_prefix_cache`` first when the
-        prefix index is on) — anything non-zero is a leak.  0 in dense
-        mode (there is no pool to leak from)."""
-        return self.allocator.in_use if self._paged else 0
+        prefix index is on) — anything non-zero is a leak, on the
+        device pool *or* the host cold tier (a drained engine has no
+        swapped requests and no cold entries left to hold host pages).
+        0 in dense mode (there is no pool to leak from)."""
+        if not self._paged:
+            return 0
+        host = self.host_pool.in_use if self.host_pool is not None else 0
+        return self.allocator.in_use + host
 
     # ------------------------------------------------------------------
     # batch convenience API (examples / tests)

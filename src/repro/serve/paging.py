@@ -70,8 +70,8 @@ import hashlib
 
 import numpy as np
 
-__all__ = ["PageAllocator", "PageTable", "PrefixCache", "pages_needed",
-           "hash_chunks"]
+__all__ = ["PageAllocator", "PageTable", "PrefixCache", "HostPagePool",
+           "pages_needed", "hash_chunks"]
 
 
 def pages_needed(rows: int, page_size: int) -> int:
@@ -192,6 +192,87 @@ class PageAllocator:
             if self._refs[p] == 0:
                 del self._refs[p]
                 self._free.append(p)
+
+
+class HostPagePool:
+    """Host-memory cold tier: refcounted page ids whose contents live in
+    host RAM as gathered KV-row payloads instead of device pools.
+
+    Two clients share it: preemption swap-out parks an evicted slot's
+    live pages here so resume is an O(pages) copy instead of an
+    O(generated_len) replay, and the prefix index demotes reclaimed
+    entries here instead of recomputing them on the next hit.  Page ids
+    are a namespace of their own — a host page is never mapped into a
+    device page table, so there is no trash page (``reserved=0``) and no
+    interaction with ``PageTable`` validation.
+
+    The refcount discipline is ``PageAllocator``'s, delegated verbatim
+    (alloc at 1, ``share`` adds a holder, ``free`` decrements, double
+    frees raise), plus per-page payload storage: ``store`` attaches a
+    page's gathered rows, ``load`` reads them back, and recycling a page
+    (refcount reaching zero) drops its payload so leaked host memory is
+    exactly leaked pages — a drained engine asserts ``in_use == 0`` on
+    this pool too.
+    """
+
+    def __init__(self, num_pages: int):
+        if num_pages < 1:
+            raise ValueError(f"num_pages must be >= 1, got {num_pages}")
+        self._alloc = PageAllocator(num_pages, reserved=0)
+        self._data: dict[int, object] = {}
+
+    @property
+    def capacity(self) -> int:
+        return self._alloc.capacity
+
+    @property
+    def available(self) -> int:
+        return self._alloc.available
+
+    @property
+    def in_use(self) -> int:
+        return self._alloc.in_use
+
+    def refcount(self, page: int) -> int:
+        return self._alloc.refcount(page)
+
+    def can_alloc(self, n: int) -> bool:
+        return self._alloc.can_alloc(n)
+
+    def alloc(self, n: int) -> list[int] | None:
+        """Pop ``n`` host pages at refcount 1 each, or ``None`` — the
+        cold tier is backpressured exactly like the device pool (a full
+        host tier falls back to replay-resume / plain reclaim)."""
+        return self._alloc.alloc(n)
+
+    def share(self, pages) -> None:
+        self._alloc.share(pages)
+
+    def free(self, pages) -> None:
+        """Drop one reference per page; payloads die with their last
+        holder so the pool never pins stale KV rows."""
+        pages = list(pages)
+        self._alloc.free(pages)
+        for p in pages:
+            if self._alloc.refcount(p) == 0:
+                self._data.pop(p, None)
+
+    def store(self, page: int, payload) -> None:
+        """Attach ``payload`` (a gathered per-page cache pytree) to a
+        held page.  Raises on a page with no current holder — storing
+        into a recycled id would silently resurrect freed data."""
+        if self._alloc.refcount(page) < 1:
+            raise ValueError(f"storing into host page {page} with no "
+                             f"outstanding references")
+        self._data[page] = payload
+
+    def load(self, page: int):
+        """Payload of a held page; raises if nothing was stored (a
+        swap-in of a page that was never swapped out is a scheduler
+        bug, not a cache miss)."""
+        if page not in self._data:
+            raise ValueError(f"host page {page} has no stored payload")
+        return self._data[page]
 
 
 class PageTable:
@@ -361,6 +442,20 @@ class PrefixCache:
     unreachable but still pinned), and only entries whose page has no
     holder besides the cache (refcount 1) are dropped: evicting a page
     another slot still maps would gain the pool nothing.
+
+    **Cold tier.**  With :meth:`attach_cold_tier`, a reclaimed entry is
+    *demoted* instead of forgotten: its page's rows are copied to a host
+    page (the ``demote`` callback, backed by :class:`HostPagePool`) and
+    the key survives in a cold index.  The device page is freed either
+    way — reclaim's pool math is unchanged — but a later prompt whose
+    hash chain reaches a cold run promotes those chunks back with an
+    O(pages) host→device copy instead of recomputing their prefill.
+    Demotion drops leaf-first, so the cold index holds contiguous chain
+    *tails* whose hot prefix is still resident — exactly the shape
+    :meth:`match_cold` extends a hot hit run with.  When the host pool
+    is full the oldest cold entries die to make room; if it is still
+    full the entry is simply dropped (the cold tier degrades to the old
+    behaviour, never blocks reclaim).
     """
 
     def __init__(self, page_size: int, allocator: PageAllocator):
@@ -370,6 +465,11 @@ class PrefixCache:
         self.allocator = allocator
         self._entries: dict[bytes, _PrefixEntry] = {}
         self._clock = 0
+        # cold tier: key -> host page id, in demotion order (oldest
+        # first); installed by attach_cold_tier, absent by default
+        self._cold: dict[bytes, int] = {}
+        self._demote = None
+        self._release = None
 
     def __len__(self) -> int:
         return len(self._entries)
@@ -438,10 +538,54 @@ class PrefixCache:
                 if e.children == 0 and e.page not in keep
                 and self.allocator.refcount(e.page) == 1]
 
+    def attach_cold_tier(self, demote, release) -> None:
+        """Install host-tier callbacks: ``demote(page) -> host_id |
+        None`` copies a device page's rows to a host page (None = host
+        pool full), ``release(host_id)`` frees one.  The engine owns
+        both — the index never touches cache tensors itself."""
+        self._demote = demote
+        self._release = release
+
+    @property
+    def cold_size(self) -> int:
+        """Entries currently parked in the cold tier."""
+        return len(self._cold)
+
+    def match_cold(self, keys: list[bytes], skip: int) -> int:
+        """Length of the consecutive cold-run extension of a hot hit
+        run: how many of ``keys[skip:]`` sit in the cold index without a
+        gap.  Read-only, like :meth:`match`."""
+        n = 0
+        for key in keys[skip:]:
+            if key not in self._cold:
+                break
+            n += 1
+        return n
+
+    def pop_cold(self, keys: list[bytes]) -> list[int]:
+        """Remove ``keys`` from the cold index and hand their host pages
+        to the caller (promotion: the engine loads each payload into a
+        fresh device page, then frees the host page).  Raises on a key
+        that is not cold — promotion plans come from ``match_cold``."""
+        missing = [k for k in keys if k not in self._cold]
+        if missing:
+            raise ValueError(f"{len(missing)} promotion key(s) not in the "
+                             f"cold index")
+        return [self._cold.pop(k) for k in keys]
+
     def _drop_entry(self, key: bytes) -> None:
         e = self._entries.pop(key)
         if e.parent is not None and e.parent in self._entries:
             self._entries[e.parent].children -= 1
+        if self._demote is not None and key not in self._cold:
+            hid = self._demote(e.page)
+            while hid is None and self._cold:
+                # cold tier full: the oldest demotions die to make room
+                oldest = next(iter(self._cold))
+                self._release(self._cold.pop(oldest))
+                hid = self._demote(e.page)
+            if hid is not None:
+                self._cold[key] = hid
         self.allocator.free([e.page])
 
     def reclaim(self, n: int, keep=frozenset()) -> int:
@@ -486,3 +630,7 @@ class PrefixCache:
         for e in self._entries.values():
             self.allocator.free([e.page])
         self._entries.clear()
+        if self._release is not None:
+            for hid in self._cold.values():
+                self._release(hid)
+        self._cold.clear()

@@ -271,6 +271,16 @@ class Router:
             "tokens_per_step": spec_toks / max(1, slot_rounds),
             "spec_rollback_pages": sum(s["spec_rollback_pages"]
                                        for s in per),
+            "prefill_waves": sum(s["prefill_waves"] for s in per),
+            "decode_chunks": sum(s["decode_chunks"] for s in per),
+            "swap_out": sum(s["swap_out"] for s in per),
+            "swap_in": sum(s["swap_in"] for s in per),
+            "replay_steps_saved": sum(s["replay_steps_saved"]
+                                      for s in per),
+            "host_pages": sum(s["host_pages"] for s in per),
+            "prefix_cold_pages": sum(s["prefix_cold_pages"] for s in per),
+            "prefix_cold_hits": sum(s["prefix_cold_hits"] for s in per),
+            "prefix_demotions": sum(s["prefix_demotions"] for s in per),
             "dp_replicas": n,
             "placements": list(self.placements),
             "per_replica": [

@@ -213,6 +213,15 @@ def run_timed_workload(engine, vocab_size: int, *, requests: int,
         "acceptance_rate": round(stats["acceptance_rate"], 3),
         "tokens_per_step": round(stats["tokens_per_step"], 3),
         "spec_rollback_pages": stats["spec_rollback_pages"],
+        # tail-latency mechanisms (all zero with them off): wave/chunk
+        # dispatch counts, host-tier swap traffic, and the decode steps
+        # a page-copy resume did not have to replay
+        "prefill_waves": stats.get("prefill_waves", 0),
+        "decode_chunks": stats.get("decode_chunks", 0),
+        "swap_out": stats.get("swap_out", 0),
+        "swap_in": stats.get("swap_in", 0),
+        "replay_steps_saved": stats.get("replay_steps_saved", 0),
+        "prefix_cold_hits": stats.get("prefix_cold_hits", 0),
         "truncated": int(sum(done[i].truncated for i in ids)),
         "compile_s": round(compile_s, 2),
         "compile_counts": engine.compile_counts,
