@@ -25,7 +25,8 @@ import json
 
 from repro.launch.mesh import HW
 
-__all__ = ["RooflineTerms", "analyze_cell", "analyze_file", "format_table"]
+__all__ = ["RooflineTerms", "analyze_cell", "analyze_file",
+           "format_table", "stage_roofline"]
 
 
 @dataclasses.dataclass
@@ -102,6 +103,28 @@ def analyze_cell(record: dict) -> RooflineTerms | None:
         dominant=dominant, model_flops_per_device=model_flops,
         hlo_flops_per_device=flops_dev, useful_ratio=useful,
         roofline_fraction=frac)
+
+
+def stage_roofline(stage_cost: dict) -> dict:
+    """Roofline terms for one ``staticcheck`` stage-cost row — the
+    static front-end: flops/bytes come from the lowered jaxpr walk
+    (``repro.staticcheck.flops``) instead of a dry-run artifact, so a
+    serving stage gets its compute/memory bound *before* it ever runs.
+    Single-device serving dispatches have no collective term; the
+    fully-multiplied flop total and the top-level aval bytes give the
+    per-dispatch step-time floor."""
+    flops = float(stage_cost["total_flops"])
+    io_bytes = float(stage_cost["io_bytes"])
+    compute_s = flops / HW.PEAK_BF16_FLOPS
+    memory_s = io_bytes / HW.HBM_BW
+    return {
+        "compute_s": compute_s,
+        "memory_s": memory_s,
+        "step_s": max(compute_s, memory_s),   # overlapped lower bound
+        "dominant": "compute" if compute_s >= memory_s else "memory",
+        "arithmetic_intensity": flops / max(io_bytes, 1.0),
+        "ridge_intensity": HW.PEAK_BF16_FLOPS / HW.HBM_BW,
+    }
 
 
 def analyze_file(path: str) -> list[RooflineTerms]:

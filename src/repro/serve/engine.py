@@ -431,7 +431,14 @@ class _CountingJit:
     derives that key per call and counts distinct keys, which makes the
     refill-without-recompile invariant checkable without the jax-private
     ``_cache_size`` probe (whose absence used to crash the serving
-    benchmark on any jax upgrade that moved it)."""
+    benchmark on any jax upgrade that moved it).
+
+    The recorded signatures are themselves the static-analysis surface:
+    each one reconstructs (via ``abstract_args``) into a tree of
+    ``ShapeDtypeStruct`` leaves that can be fed to ``jit_fn.lower`` /
+    ``jit_fn.trace`` long after the run, so ``repro.staticcheck`` can
+    re-lower every stage program a live engine actually compiled and
+    inspect the jaxpr/HLO without re-running the workload."""
 
     def __init__(self, fn, **jit_kwargs):
         self._fn = jax.jit(fn, **jit_kwargs)
@@ -452,6 +459,40 @@ class _CountingJit:
     @property
     def compile_count(self) -> int:
         return len(self._keys)
+
+    @property
+    def jit_fn(self):
+        """The underlying ``jax.jit``-wrapped callable (for ``.lower`` /
+        ``.trace`` against signatures returned by ``abstract_args``)."""
+        return self._fn
+
+    @property
+    def signatures(self) -> tuple:
+        """The distinct abstract call signatures recorded so far, in a
+        deterministic order.  Each is ``(treedef, leaf_sigs)`` where
+        array leaves carry ``(shape, dtype, weak_type)`` and non-array
+        leaves carry ``(type_name,)``."""
+        return tuple(sorted(self._keys, key=repr))
+
+    # non-array leaves lose their value in the signature; any concrete
+    # stand-in lowers to the same program because stage bodies consume
+    # scalars as traced data, never as shapes
+    _SCALAR_STANDIN = {"int": 0, "float": 0.0, "bool": False,
+                       "NoneType": None}
+
+    @classmethod
+    def abstract_args(cls, signature) -> tuple:
+        """Rebuild a recorded signature into the positional-args tuple
+        of ``ShapeDtypeStruct`` leaves that ``jax.jit`` saw."""
+        treedef, leaf_sigs = signature
+        leaves = []
+        for sig in leaf_sigs:
+            if len(sig) == 3:
+                shape, dtype, _weak = sig
+                leaves.append(jax.ShapeDtypeStruct(shape, dtype))
+            else:
+                leaves.append(cls._SCALAR_STANDIN[sig[0]])
+        return jax.tree_util.tree_unflatten(treedef, leaves)
 
 
 def _apply_overrides(cfg: ModelConfig, scfg: ServeConfig) -> ModelConfig:
@@ -1211,6 +1252,25 @@ class Engine:
             counts["draft"] = self._draft_fn.compile_count
             counts["verify"] = self._verify_fn.compile_count
         return counts
+
+    def stage_programs(self) -> dict:
+        """The stage programs this engine actually built, as
+        ``{stage_name: _CountingJit}`` — the entry point for
+        ``repro.staticcheck``'s jaxpr layer, which re-lowers each
+        recorded abstract signature and inspects the result.  Stages a
+        mode never constructs (e.g. ``decode_chunk`` under spec
+        decoding) are absent, mirroring ``compile_counts``."""
+        stages = {}
+        if self._prefill_fn is not None:
+            stages["prefill"] = self._prefill_fn
+        if self._wave_fn is not None:
+            stages["prefill_chunk"] = self._wave_fn
+        if self._chunk_fn is not None:
+            stages["decode_chunk"] = self._chunk_fn
+        if self._spec:
+            stages["draft"] = self._draft_fn
+            stages["verify"] = self._verify_fn
+        return stages
 
     @property
     def stats(self) -> dict:

@@ -1,0 +1,30 @@
+"""Static-analysis gate for the serving stack's hot-path contracts.
+
+Two layers:
+
+* **AST rules** (``ast_rules``) lint the ``src/repro`` tree for
+  tracer-leak / host-sync / recompile-risk patterns and repo contracts
+  (cache-carrying jit sites must donate; ``serve/paging.py`` stays
+  host-side numpy).
+* **jaxpr rules** (``jaxpr_rules``) build tiny engines across a
+  quant x backend x mode grid, re-lower every stage program from its
+  recorded abstract signatures, and verify the dtype / donation /
+  callback / compile-pin contracts on the lowered artifacts.  The same
+  walk extracts per-stage flop/byte counts (``flops``) cross-checked
+  against ``core.cycle_model`` and XLA's own cost analysis — the
+  static front-end for the analytic capacity model.
+
+Findings flow through a committed suppression baseline
+(``tools/staticcheck_baseline.json``); the CLI is
+``tools/staticcheck.py`` and the gate runs in CI.
+"""
+
+from repro.staticcheck.findings import (Finding, load_baseline,
+                                        apply_baseline)
+from repro.staticcheck.ast_rules import run_ast_rules
+from repro.staticcheck.runner import (GRID_CELLS, run_gate,
+                                      run_jaxpr_layer)
+
+__all__ = ["Finding", "load_baseline", "apply_baseline",
+           "run_ast_rules", "GRID_CELLS", "run_gate",
+           "run_jaxpr_layer"]

@@ -1,0 +1,84 @@
+#!/usr/bin/env python
+"""Static-analysis gate CLI — see docs/staticcheck.md.
+
+Usage:
+    python tools/staticcheck.py                 # full gate (AST + jaxpr grid)
+    python tools/staticcheck.py --ast-only      # fast lint, no engine builds
+    python tools/staticcheck.py --report out.json
+    python tools/staticcheck.py --update-baseline   # rewrite suppressions
+
+Exit status: 0 = clean (every finding suppressed, no stale
+suppressions); 1 = unsuppressed findings or stale baseline entries.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from pathlib import Path
+
+REPO_ROOT = Path(__file__).resolve().parent.parent
+SRC = REPO_ROOT / "src"
+if str(SRC) not in sys.path:
+    sys.path.insert(0, str(SRC))
+
+DEFAULT_BASELINE = REPO_ROOT / "tools" / "staticcheck_baseline.json"
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--root", default=str(SRC / "repro"),
+                    help="tree to lint (default: src/repro)")
+    ap.add_argument("--baseline", default=str(DEFAULT_BASELINE),
+                    help="suppression baseline JSON")
+    ap.add_argument("--ast-only", action="store_true",
+                    help="skip the jaxpr grid (no engine builds)")
+    ap.add_argument("--report", metavar="PATH",
+                    help="write a JSON summary (rules run, findings, "
+                         "per-stage flop/byte table)")
+    ap.add_argument("--update-baseline", action="store_true",
+                    help="rewrite the baseline to suppress every "
+                         "current finding (review the diff!)")
+    args = ap.parse_args(argv)
+
+    from repro.staticcheck import run_gate
+    from repro.staticcheck.findings import load_baseline, apply_baseline
+
+    findings, report = run_gate(args.root, REPO_ROOT,
+                                ast_only=args.ast_only)
+
+    if args.update_baseline:
+        data = {"version": 1, "suppressions": [
+            {"key": f.key, "reason": "TODO: justify or fix"}
+            for f in sorted(findings, key=lambda f: f.key)]}
+        Path(args.baseline).write_text(json.dumps(data, indent=2) + "\n")
+        print(f"baseline rewritten with {len(findings)} suppressions: "
+              f"{args.baseline}")
+        return 0
+
+    baseline = load_baseline(args.baseline)
+    unsuppressed, suppressed, stale = apply_baseline(findings, baseline)
+    report["suppressed"] = [f.to_dict() for f in suppressed]
+    report["stale_suppressions"] = stale
+    report["findings"] = [f.to_dict() for f in unsuppressed]
+
+    if args.report:
+        Path(args.report).write_text(json.dumps(report, indent=2,
+                                                default=str) + "\n")
+
+    for f in unsuppressed:
+        print(f.render())
+    for key in stale:
+        print(f"STALE suppression (no longer fires — remove it): {key}")
+
+    n_cost = len(report.get("stage_costs", []))
+    status = "FAIL" if (unsuppressed or stale) else "OK"
+    print(f"staticcheck {status}: {len(unsuppressed)} finding(s), "
+          f"{len(suppressed)} suppressed, {len(stale)} stale "
+          f"suppression(s), {n_cost} stage lowering(s) analysed")
+    return 1 if (unsuppressed or stale) else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())
