@@ -95,7 +95,51 @@ _HEADER = ("workload,quant,backend,cache,alloc,prefix,spec,tail,pool_pages,"
            "ttft_p99_ms,itl_p50_ms,itl_p99_ms,cache_kb_per_req,occupancy,"
            "concurrency,preemptions,swap_out,swap_in,replay_steps_saved,"
            "prefix_hit_rate,acceptance_rate,"
-           "tokens_per_step,compile_s,device_count,mesh,dp_replicas")
+           "tokens_per_step,compile_s,device_count,mesh,dp_replicas,"
+           "predicted_tok_s,predicted_ttft_p50_ms,prediction_err_pct")
+
+
+def _attach_capacity(row, engine, scfg, *, requests, stagger,
+                     shared_prefix, arrival_mode, prefix_cache, tp, dp):
+    """Predict the row's own workload with the analytic capacity model
+    (calibrated per-dispatch stage costs from this very engine) and
+    embed the full replay blob, so ``tools/autotune.py --validate`` and
+    ``tests/test_capacity.py`` can re-check model-vs-measured from the
+    committed JSON alone.  Mesh/router rows (tp/dp > 1) carry no
+    prediction — the capacity model covers the single-device engine."""
+    row.update({"predicted_tok_s": None, "predicted_ttft_p50_ms": None,
+                "prediction_err_pct": None})
+    if tp > 1 or dp > 1:
+        return
+    from repro.capacity import Knobs, WorkloadShape, predict
+    from repro.capacity.calibrate import calibrate_engine
+    shape = WorkloadShape(requests=requests, prompt_budget=PROMPT_BUDGET,
+                          new_tokens=NEW_TOKENS, stagger_s=stagger,
+                          shared_prefix=shared_prefix,
+                          arrival_mode=arrival_mode)
+    knobs = Knobs.from_serve_config(scfg)
+    costs = calibrate_engine(engine)
+    acceptance = (float(row["acceptance_rate"]) if scfg.spec_decode
+                  else None)
+    ctb = int(engine.cache_token_bytes)
+    pred = predict(knobs, shape, costs, cache_token_bytes=ctb,
+                   acceptance=acceptance)
+    row["capacity"] = {
+        # gated rows are the model-vs-measured regression surface; the
+        # prefix-cache rows stay ungated (page sharing is unmodeled)
+        "gated": not prefix_cache and shared_prefix == 0.0,
+        "knobs": knobs.to_dict(), "shape": shape.to_dict(),
+        "costs": costs.to_dict(), "acceptance": acceptance,
+        "cache_token_bytes": ctb,
+        "predicted": {k: (round(v, 4) if isinstance(v, float) else v)
+                      for k, v in pred.items()},
+    }
+    if pred.get("feasible") and "tok_per_s" in pred:
+        row["predicted_tok_s"] = round(pred["tok_per_s"], 1)
+        row["predicted_ttft_p50_ms"] = round(pred["ttft_p50_ms"], 1)
+        row["prediction_err_pct"] = round(
+            100.0 * abs(pred["tok_per_s"] - row["tok_per_s"])
+            / max(row["tok_per_s"], 1e-9), 1)
 
 
 def _bench_one(cfg, params, quant, backend, workload, cache_mode,
@@ -164,6 +208,9 @@ def _bench_one(cfg, params, quant, backend, workload, cache_mode,
            else "-", "prefix": "on" if prefix_cache else "-", **r}
     row["spec"] = "on" if spec else "-"
     row["tail"] = "on" if (wave or swap_mode != "off") else "-"
+    _attach_capacity(row, engine, scfg, requests=requests, stagger=stagger,
+                     shared_prefix=shared_prefix, arrival_mode=arrival_mode,
+                     prefix_cache=prefix_cache, tp=tp, dp=dp)
     return row, warn
 
 
@@ -180,7 +227,10 @@ def _csv(r):
             f"{r.get('replay_steps_saved', 0)},"
             f"{r['prefix_hit_rate']},{r['acceptance_rate']},"
             f"{r['tokens_per_step']},{r['compile_s']},"
-            f"{r['device_count']},{mesh},{r['dp_replicas']}")
+            f"{r['device_count']},{mesh},{r['dp_replicas']},"
+            f"{r.get('predicted_tok_s') or '-'},"
+            f"{r.get('predicted_ttft_p50_ms') or '-'},"
+            f"{r.get('prediction_err_pct') or '-'}")
 
 
 MESH_TRIO = [(1, 1), (2, 1), (1, 2)]          # (tp, dp) per row
@@ -383,7 +433,16 @@ def run(json_path: str | None = None):
                     "router — its row carries per_replica placement and "
                     "prefix-affinity hit rates). CPU wall-clock across "
                     "forced-host shards is a functional proxy, not a "
-                    "speedup claim.",
+                    "speedup claim. Every single-device row also carries "
+                    "the analytic capacity model's prediction "
+                    "(predicted_tok_s / predicted_ttft_p50_ms / "
+                    "prediction_err_pct) plus the full replay blob "
+                    "(knobs, workload shape, calibrated per-dispatch "
+                    "stage costs) under its 'capacity' key; rows with "
+                    "capacity.gated=true are the model-vs-measured "
+                    "regression surface that tools/autotune.py "
+                    "--validate and tests/test_capacity.py replay — see "
+                    "docs/capacity.md for the tolerance policy.",
             "arch": ARCH,
             "results": rows,
         }

@@ -1,0 +1,29 @@
+"""Analytic serving-capacity model: predict tok/s, TTFT, cache
+footprint, concurrency and preemption risk from (knobs, workload
+shape, per-stage costs) without running the model — then hold every
+prediction to account against measured ``BENCH_serve.json`` rows.
+
+Layout:
+
+- ``spec_math``  — geometric-run speculative-decoding estimator (the
+  single home of the math ``tools/spec_report.py`` tabulates).
+- ``model``      — :class:`Knobs` / :class:`WorkloadShape` /
+  :class:`StageCosts` and :func:`predict`, the discrete-event replay
+  of the engine scheduler.
+- ``calibrate``  — measured per-dispatch stage costs from a live
+  engine (what bench rows embed).
+- ``validate``   — model-vs-measured tolerance checks over bench rows
+  (shared by ``tools/autotune.py --validate`` and
+  ``tests/test_capacity.py``).
+"""
+
+from repro.capacity.model import (CapacityError, Knobs, StageCosts,
+                                  WorkloadShape,
+                                  analytic_cache_token_bytes, predict)
+from repro.capacity.spec_math import (acceptance_from_tokens_per_step,
+                                      expected_tokens_per_round, speedup)
+
+__all__ = ["CapacityError", "Knobs", "StageCosts", "WorkloadShape",
+           "analytic_cache_token_bytes", "predict",
+           "acceptance_from_tokens_per_step",
+           "expected_tokens_per_round", "speedup"]

@@ -203,6 +203,80 @@ def _verify(args, cfg, r):
           f"single-device reference")
 
 
+def _workload_shape(args):
+    from repro.capacity import WorkloadShape
+    stagger = args.stagger_ms / 1000.0 \
+        if args.workload in ("staggered", "bursty") else 0.0
+    return WorkloadShape(requests=args.requests,
+                         prompt_budget=args.prompt_len,
+                         new_tokens=args.new_tokens, stagger_s=stagger,
+                         priority_mix=args.priority_mix,
+                         shared_prefix=args.shared_prefix,
+                         arrival_mode="bursty"
+                         if args.workload == "bursty" else "uniform")
+
+
+def _predict(args, cfg, engine, r):
+    """Calibrate the live engine and print the capacity model's
+    prediction for the workload that was just measured."""
+    if args.dp > 1 or args.tp > 1 or args.mesh:
+        print("  capacity model: (skipped — covers the single-device "
+              "engine; tp/dp rows carry no prediction)")
+        return
+    from repro.capacity import predict
+    from repro.capacity.calibrate import calibrate_engine
+    costs = calibrate_engine(engine)
+    p = predict(engine.scfg, _workload_shape(args), costs,
+                cache_token_bytes=int(engine.cache_token_bytes),
+                acceptance=(r["acceptance_rate"]
+                            if args.spec_decode else None))
+    if not p["feasible"] or "tok_per_s" not in p:
+        print(f"  capacity model: infeasible — "
+              f"{p['infeasible_reason']}")
+        return
+    err = 100.0 * abs(p["tok_per_s"] - r["tok_per_s"]) \
+        / max(r["tok_per_s"], 1e-9)
+    print(f"  capacity model: predicted {p['tok_per_s']:.1f} tok/s "
+          f"(measured {r['tok_per_s']:.1f}, {err:.0f}% off), "
+          f"ttft p50={p['ttft_p50_ms']:.0f}ms "
+          f"p99={p['ttft_p99_ms']:.0f}ms, "
+          f"preemptions {p['preemptions']}, "
+          f"cache {p['cache_kb_per_req']:.1f} KiB/req")
+
+
+def run_autotune(args):
+    """--autotune: knob-grid search over the analytic capacity model
+    for this launcher invocation's workload shape — prints the
+    prediction table and the winning ServeConfig kwargs, no model
+    run."""
+    import json as _json
+
+    from repro.capacity.tune import knob_grid, search, table_lines
+    if args.workload == "batch":
+        raise SystemExit("--autotune plans request workloads "
+                         "(uniform/staggered/bursty), not batch mode")
+    cfg = reduced(get_config(args.arch)).replace(quant_mode=args.quant)
+    shape = _workload_shape(args)
+    max_len = args.prompt_len + args.new_tokens
+    max_len += (-max_len) % args.page_size
+    cells = knob_grid(shape, batch=args.batch, max_len=max_len,
+                      prefill_len=args.prompt_len)
+    results, winner = search(cfg, shape, cells,
+                             objective=args.autotune,
+                             ttft_slo_ms=args.ttft_slo_ms, alpha=0.8)
+    print(f"# autotune: {len(cells)} cells, objective={args.autotune}"
+          + (f", ttft_slo={args.ttft_slo_ms}ms"
+             if args.ttft_slo_ms else ""))
+    for line in table_lines(results, winner):
+        print(line)
+    if winner is None:
+        print("# no admissible configuration")
+        return 1
+    print("# winning ServeConfig kwargs:")
+    print(_json.dumps(winner["knobs"].to_dict(), indent=1))
+    return 0
+
+
 def run_requests(args, cfg, engine):
     """Request-level workload: ``uniform`` submits everything at t=0,
     ``staggered`` spaces arrivals by --stagger-ms, ``bursty`` clusters
@@ -263,6 +337,8 @@ def run_requests(args, cfg, engine):
         hi_s = "n/a (no hi requests)" if hi is None else f"p50={hi:.0f}ms"
         lo_s = "n/a (no lo requests)" if lo is None else f"p50={lo:.0f}ms"
         print(f"  priority split:  hi {hi_s}  lo {lo_s}")
+    if args.predict:
+        _predict(args, cfg, engine, r)
     if args.verify:
         _verify(args, cfg, r)
 
@@ -386,11 +462,30 @@ def main(argv=None):
                          "dp=1 reference and require token-for-token "
                          "stream equality (greedy only; dense quant "
                          "when --dp > 1)")
+    ap.add_argument("--predict", action="store_true",
+                    help="after the measured run, calibrate the "
+                         "engine's per-dispatch stage costs and print "
+                         "the analytic capacity model's prediction for "
+                         "the same workload next to the measurement "
+                         "(single-device request workloads)")
+    ap.add_argument("--autotune", default=None, metavar="OBJECTIVE",
+                    choices=["max-tok-s", "min-pages"],
+                    help="skip the run: search the serving knob grid "
+                         "with the analytic capacity model for this "
+                         "workload shape and print the winning "
+                         "ServeConfig (objectives: max-tok-s under "
+                         "--ttft-slo-ms, min-pages at zero predicted "
+                         "preemptions)")
+    ap.add_argument("--ttft-slo-ms", type=float, default=None,
+                    help="p99 TTFT SLO an --autotune max-tok-s winner "
+                         "must meet")
     args = ap.parse_args(argv)
 
     if args.workload == "batch" and args.dp > 1:
         raise SystemExit("--dp applies to request workloads "
                          "(uniform/staggered/bursty), not batch mode")
+    if args.autotune:
+        return run_autotune(args)
     cfg, _, engine = _build(args)
     if args.workload == "batch":
         run_batch(args, cfg, engine)

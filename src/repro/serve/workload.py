@@ -46,11 +46,12 @@ definitions cannot drift apart:
 
 from __future__ import annotations
 
+import dataclasses
 import time
 
 import numpy as np
 
-__all__ = ["run_timed_workload"]
+__all__ = ["WorkloadDraw", "draw_workload", "run_timed_workload"]
 
 
 def _pct(a, q) -> float | None:
@@ -68,23 +69,49 @@ def _ms(x: float | None, digits: int = 1) -> float | None:
     return None if x is None else round(x * 1e3, digits)
 
 
-def run_timed_workload(engine, vocab_size: int, *, requests: int,
-                       prompt_budget: int, new_tokens: int,
-                       stagger_s: float = 0.0, seed: int = 0,
-                       priority_mix: float = 0.0,
-                       shared_prefix: float = 0.0,
-                       arrival_mode: str = "uniform",
-                       collect_streams: bool = False) -> dict:
-    """Submit ``requests`` random prompts and drain the engine; returns
-    throughput/latency stats.  ``arrival_mode="uniform"`` spaces
-    arrivals ``stagger_s`` apart with lengths uniform in
-    [prompt_budget/2, prompt_budget]; ``"bursty"`` keeps the same mean
-    offered load but clusters arrivals into Poisson bursts and draws
-    lengths from a clipped Pareto(1.5) heavy tail.  ``shared_prefix``
-    requests begin with one fixed system-prompt head of
-    ``prompt_budget // 2`` tokens."""
-    # validate up front: requests == 0 crashes the percentile math below
-    # and prompt_budget < 2 turns the rng.integers bounds inside out
+@dataclasses.dataclass
+class WorkloadDraw:
+    """One fully-drawn workload: the pure function of ``(seed, knobs)``
+    both the timed driver and the analytic capacity model consume, so
+    the simulated arrival/length process can never drift from the one
+    the engine is actually driven with."""
+
+    lens: np.ndarray            # drawn prompt lengths (pre shared-head)
+    arrivals: np.ndarray        # arrival offsets, seconds from t=0
+    prios: np.ndarray           # 0/1 priority class per request
+    shared: np.ndarray          # bool: carries the shared system head
+    sys_len: int                # shared system-prompt head length
+    prompts: list | None        # token arrays (None when not drawn)
+
+    @property
+    def eff_lens(self) -> np.ndarray:
+        """Effective prompt lengths as submitted: a shared-head prompt
+        is re-drawn to at least ``sys_len + 1`` tokens."""
+        return np.where(self.shared,
+                        np.maximum(self.lens, self.sys_len + 1),
+                        self.lens).astype(np.int64)
+
+    def summary(self, new_tokens: int) -> dict:
+        """Workload-shape summary for result rows: the realized
+        length/arrival distribution behind the percentile columns."""
+        eff = self.eff_lens
+        span = float(self.arrivals.max() - self.arrivals.min())
+        return {
+            "prompt_len_mean": round(float(eff.mean()), 2),
+            "prompt_len_max": int(eff.max()),
+            "prompt_tokens": int(eff.sum()),
+            "decode_tokens": int(len(eff) * new_tokens),
+            "arrival_span_s": round(span, 3),
+            "peak_burst": int(np.max(np.unique(self.arrivals,
+                                               return_counts=True)[1])),
+        }
+
+
+def _validate_workload(requests: int, prompt_budget: int,
+                       new_tokens: int, priority_mix: float,
+                       shared_prefix: float, arrival_mode: str) -> None:
+    # validate up front: requests == 0 crashes the percentile math and
+    # prompt_budget < 2 turns the rng.integers bounds inside out
     # (low = max(2, budget // 2) would exceed high = budget + 1)
     if requests < 1:
         raise ValueError(f"requests must be >= 1, got {requests}")
@@ -103,6 +130,29 @@ def run_timed_workload(engine, vocab_size: int, *, requests: int,
     if arrival_mode not in ("uniform", "bursty"):
         raise ValueError(f"arrival_mode must be 'uniform' or 'bursty', "
                          f"got {arrival_mode!r}")
+
+
+def draw_workload(vocab_size: int, *, requests: int, prompt_budget: int,
+                  new_tokens: int = 1, stagger_s: float = 0.0,
+                  seed: int = 0, priority_mix: float = 0.0,
+                  shared_prefix: float = 0.0,
+                  arrival_mode: str = "uniform",
+                  materialize: bool = True) -> WorkloadDraw:
+    """Draw the whole workload — lengths, arrivals, priorities, shared
+    mask and (when ``materialize``) the prompt token arrays — from one
+    seeded rng.  ``arrival_mode="uniform"`` spaces arrivals
+    ``stagger_s`` apart with lengths uniform in
+    [prompt_budget/2, prompt_budget]; ``"bursty"`` keeps the same mean
+    offered load but clusters arrivals into Poisson bursts and draws
+    lengths from a clipped Pareto(1.5) heavy tail.
+
+    The draw order is frozen: lens → arrivals → prios → shared mask →
+    system head → prompt bodies.  ``materialize=False`` (the capacity
+    model) stops before the prompt bodies — everything the scheduler
+    simulation needs is already drawn, bit-identical to the driver's
+    stream."""
+    _validate_workload(requests, prompt_budget, new_tokens, priority_mix,
+                       shared_prefix, arrival_mode)
     rng = np.random.default_rng(seed)
     if arrival_mode == "uniform":
         lens = rng.integers(max(2, prompt_budget // 2), prompt_budget + 1,
@@ -143,12 +193,38 @@ def run_timed_workload(engine, vocab_size: int, *, requests: int,
         tail = rng.integers(0, vocab_size, n - sys_prompt.size)
         return np.concatenate([sys_prompt, tail])
 
+    prompts = ([make_prompt(i) for i in range(requests)]
+               if materialize else None)
+    return WorkloadDraw(lens=lens, arrivals=arrivals, prios=prios,
+                        shared=shared, sys_len=int(sys_prompt.size),
+                        prompts=prompts)
+
+
+def run_timed_workload(engine, vocab_size: int, *, requests: int,
+                       prompt_budget: int, new_tokens: int,
+                       stagger_s: float = 0.0, seed: int = 0,
+                       priority_mix: float = 0.0,
+                       shared_prefix: float = 0.0,
+                       arrival_mode: str = "uniform",
+                       collect_streams: bool = False) -> dict:
+    """Submit ``requests`` random prompts and drain the engine; returns
+    throughput/latency stats.  The workload itself comes from
+    :func:`draw_workload` (shared with ``repro.capacity``'s analytic
+    predictor); ``shared_prefix`` requests begin with one fixed
+    system-prompt head of ``prompt_budget // 2`` tokens."""
     # draw every prompt BEFORE warmup, so the timed workload is a pure
     # function of (seed, workload knobs) — the warmup below submits a
     # replica-count-dependent number of requests from its own rng, and
     # must not shift the main stream (a dp=2 fleet and a solo engine
     # must see byte-identical prompts for the launcher's --verify)
-    prompts = [make_prompt(i) for i in range(requests)]
+    draw = draw_workload(vocab_size, requests=requests,
+                         prompt_budget=prompt_budget,
+                         new_tokens=new_tokens, stagger_s=stagger_s,
+                         seed=seed, priority_mix=priority_mix,
+                         shared_prefix=shared_prefix,
+                         arrival_mode=arrival_mode)
+    lens, arrivals, prios = draw.lens, draw.arrivals, draw.prios
+    prompts = draw.prompts
 
     # warmup: trigger every compilation outside the timed window — one
     # request per engine replica (a Router's JSQ placement spreads the
@@ -230,6 +306,16 @@ def run_timed_workload(engine, vocab_size: int, *, requests: int,
         "device_count": int(getattr(engine, "device_count", 1)),
         "mesh_shape": list(getattr(engine, "mesh_shape", (1, 1))),
         "dp_replicas": stats.get("dp_replicas", 1),
+        # realized workload shape (lengths/arrivals actually drawn) —
+        # the capacity model's input, recorded so every result row
+        # carries the distribution its percentiles were measured under
+        "workload_shape": {
+            "seed": seed,
+            "stagger_s": stagger_s,
+            "priority_mix": priority_mix,
+            "shared_prefix": shared_prefix,
+            **draw.summary(new_tokens),
+        },
     }
     if priority_mix > 0.0:
         # always emit both class keys when a split was requested — an

@@ -7,6 +7,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
 
 from repro.configs import get_config, reduced
 from repro.models import model_init
@@ -308,6 +310,59 @@ def test_cold_prefix_pages_reclaimed_under_pressure(model):
     assert [r.tokens for r in got] == [r.tokens for r in want]
     engine.release_prefix_cache()
     assert engine.allocator.in_use == 0
+
+
+@given(n_chunks=st.integers(1, 6), host_pages=st.integers(1, 8))
+@settings(max_examples=40, deadline=None)
+def test_cold_tier_demote_promote_roundtrip(n_chunks, host_pages):
+    """Property: reclaiming an ``n_chunks`` hash chain through a
+    ``host_pages``-deep cold tier always leaves a contiguous head run
+    of ``min(n_chunks, host_pages)`` cold entries (overflow kills the
+    oldest demotions — the leaf-most chunks), every promoted payload
+    reads back exactly what demotion stored, and the full round trip
+    leaks neither device nor host pages."""
+    from repro.serve.paging import HostPagePool
+
+    alloc = PageAllocator(16, reserved=1)
+    host = HostPagePool(host_pages)
+    cache = PrefixCache(2, alloc)
+    stored = {}
+
+    def demote(page):
+        hid = host.alloc(1)
+        if hid is None:
+            return None
+        host.store(hid[0], ("rows-of", page))
+        stored[hid[0]] = ("rows-of", page)
+        return hid[0]
+
+    cache.attach_cold_tier(demote, lambda hid: host.free([hid]))
+
+    keys = cache.chunk_keys(np.arange(n_chunks * 2, dtype=np.int64))
+    assert len(keys) == n_chunks
+    pages = alloc.alloc(n_chunks)
+    cache.insert(keys, pages)
+    alloc.free(pages)                   # cache now holds the only refs
+
+    freed = cache.reclaim(n_chunks)
+    assert freed == n_chunks
+    assert alloc.in_use == 0            # device side fully released
+    n_cold = min(n_chunks, host_pages)
+    assert cache.cold_size == n_cold
+    assert host.in_use == n_cold
+    # leaf-first demotion + oldest-first overflow keeps the chain head
+    assert cache.match_cold(keys, 0) == n_cold
+
+    hids = cache.pop_cold(keys[:n_cold])
+    for hid in hids:
+        assert host.load(hid) == stored[hid]
+        host.free([hid])
+    assert cache.cold_size == 0
+    assert host.in_use == 0             # host side fully released
+    with pytest.raises(ValueError, match="not in the cold index"):
+        cache.pop_cold(keys[:1])
+    cache.drop()
+    assert alloc.in_use == 0
 
 
 def test_resume_after_eviction_hits_own_prefix(model):

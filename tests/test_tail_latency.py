@@ -11,6 +11,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
 
 from repro.configs import get_config, reduced
 from repro.models import model_init
@@ -102,6 +104,56 @@ def test_host_pool_backpressure():
     assert not pool.can_alloc(1)
     pool.free(held[:1])
     assert pool.alloc(1) is not None
+
+
+@given(num_pages=st.integers(1, 6),
+       ops=st.lists(st.sampled_from(["alloc", "share", "free", "store"]),
+                    min_size=1, max_size=40))
+@settings(max_examples=60, deadline=None)
+def test_host_pool_refcount_invariants(num_pages, ops):
+    """Property: under any interleaving of alloc/share/free/store, the
+    pool's counters match a shadow refcount model exactly, payloads are
+    readable iff stored on a page with a live holder, and a page's
+    payload dies with its last reference."""
+    pool = HostPagePool(num_pages)
+    rc: dict[int, int] = {}             # shadow refcounts
+    stored: dict[int, object] = {}      # shadow payloads
+    for step, op in enumerate(ops):
+        held = sorted(p for p, n in rc.items() if n > 0)
+        if op == "alloc":
+            got = pool.alloc(1)
+            if len(held) >= num_pages:
+                assert got is None      # backpressure, never overcommit
+            else:
+                assert got is not None
+                (p,) = got
+                assert rc.get(p, 0) == 0, "live id handed out twice"
+                rc[p] = 1
+                # a recycled id's old payload must have died already
+                assert p not in stored
+        elif op == "share" and held:
+            p = held[step % len(held)]
+            pool.share([p])
+            rc[p] += 1
+        elif op == "free" and held:
+            p = held[step % len(held)]
+            pool.free([p])
+            rc[p] -= 1
+            if rc[p] == 0:
+                stored.pop(p, None)
+                with pytest.raises(ValueError):
+                    pool.load(p)        # payload died with last holder
+        elif op == "store" and held:
+            p = held[step % len(held)]
+            pool.store(p, ("payload", step))
+            stored[p] = ("payload", step)
+        # the pool's view must equal the shadow model after every op
+        assert pool.in_use == sum(1 for n in rc.values() if n > 0)
+        assert pool.available == pool.capacity - pool.in_use
+        for p, n in rc.items():
+            assert pool.refcount(p) == n
+        for p, payload in stored.items():
+            assert pool.load(p) == payload
 
 
 # ---------------------------------------------------------------------------

@@ -1,0 +1,150 @@
+"""Serving-knob autotuner over the analytic capacity model.
+
+Enumerates a structured ServeConfig knob grid (page_size, num_pages,
+decode_chunk, prefill_chunk, admit_group, spec_k, alloc/cache/swap
+modes), predicts each cell with ``repro.capacity`` — **without running
+the model**: per-stage costs come from the static MACs/bytes model
+bridged through the roofline constants — and ranks the feasible cells
+for a stated objective:
+
+* ``max-tok-s``  — highest predicted tok/s, optionally subject to a
+  p99 TTFT SLO (``--ttft-slo-ms``);
+* ``min-pages``  — smallest page pool that serves the workload with
+  zero predicted preemptions (cheapest HBM reservation that never
+  evicts), tie-broken by predicted tok/s.
+
+Emits the prediction table plus the winning knob set as a ServeConfig
+kwargs dict.  ``--validate BENCH.json`` switches to the
+model-vs-measured mode: replay every committed bench row's prediction
+from its embedded calibration blob (``repro.capacity.validate``) and
+exit 1 if any gated row falls outside the documented tolerance —
+the same check ``tests/test_capacity.py`` runs in tier-1.
+
+    PYTHONPATH=src python tools/autotune.py --objective max-tok-s \
+        --ttft-slo-ms 50
+    PYTHONPATH=src python tools/autotune.py --objective min-pages
+    PYTHONPATH=src python tools/autotune.py \
+        --validate benchmarks/BENCH_serve.json
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+sys.path.insert(0, os.path.join(
+    os.path.dirname(os.path.dirname(os.path.abspath(__file__))), "src"))
+
+from repro.capacity import WorkloadShape  # noqa: E402
+from repro.capacity.tune import (knob_grid, search,  # noqa: E402
+                                 table_lines)
+
+
+def run_validate(path: str) -> int:
+    from repro.capacity.validate import TOLERANCE, load_bench, \
+        validate_rows
+    ok, checks = validate_rows(load_bench(path))
+    tol = ", ".join(f"{m}: {rel:.0%} rel / {floor:g} abs floor"
+                    for m, (rel, floor) in TOLERANCE.items())
+    print(f"# replaying {len(checks)} prediction(s) from {path} "
+          f"({tol})")
+    print("workload,quant,backend,cache,alloc,spec,tail,gated,"
+          "tok_per_s,pred_tok_per_s,err%,ttft_p50,pred_ttft_p50,"
+          "err%,verdict")
+    for c in checks:
+        t, f = c["metrics"]["tok_per_s"], c["metrics"]["ttft_p50_ms"]
+        verdict = ("OK" if c["within"]
+                   else ("DRIFT" if c["gated"] else "drift (ungated)"))
+        print(f"{c['workload']},{c['quant']},{c['backend']},"
+              f"{c['cache']},{c['alloc']},{c['spec']},{c['tail']},"
+              f"{'yes' if c['gated'] else '-'},"
+              f"{t['measured']:.0f},{t['predicted']:.0f},"
+              f"{t['err_pct']},{f['measured']:.1f},"
+              f"{f['predicted']:.1f},{f['err_pct']},{verdict}")
+    n_gated = sum(c["gated"] for c in checks)
+    print(f"# {n_gated} gated row(s); "
+          f"{'all within tolerance' if ok else 'VALIDATION FAILED'}")
+    return 0 if ok else 1
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="yi-6b")
+    ap.add_argument("--full-config", action="store_true",
+                    help="use the full ModelConfig (default: reduced(), "
+                         "matching the benchmark proxy)")
+    ap.add_argument("--objective", choices=("max-tok-s", "min-pages"),
+                    default="max-tok-s")
+    ap.add_argument("--ttft-slo-ms", type=float, default=None,
+                    help="p99 TTFT SLO the winner must meet")
+    ap.add_argument("--alpha", type=float, default=0.8,
+                    help="assumed speculative acceptance for spec cells")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--max-len", type=int, default=64)
+    ap.add_argument("--requests", type=int, default=8)
+    ap.add_argument("--prompt-budget", type=int, default=16)
+    ap.add_argument("--new-tokens", type=int, default=16)
+    ap.add_argument("--stagger-ms", type=float, default=0.0)
+    ap.add_argument("--arrival", choices=("uniform", "bursty"),
+                    default="uniform")
+    ap.add_argument("--grid", choices=("small", "full"), default="full",
+                    help="small = the CI smoke grid")
+    ap.add_argument("--json", default=None,
+                    help="write winner + full prediction table here")
+    ap.add_argument("--validate", default=None, metavar="BENCH_JSON",
+                    help="instead of searching: replay every committed "
+                         "bench row's prediction from its calibration "
+                         "blob and fail outside tolerance")
+    args = ap.parse_args(argv)
+
+    if args.validate:
+        return run_validate(args.validate)
+
+    from repro.configs import get_config, reduced
+    cfg = get_config(args.arch)
+    if not args.full_config:
+        cfg = reduced(cfg)
+    shape = WorkloadShape(requests=args.requests,
+                          prompt_budget=args.prompt_budget,
+                          new_tokens=args.new_tokens,
+                          stagger_s=args.stagger_ms / 1e3,
+                          arrival_mode=args.arrival)
+    cells = knob_grid(shape, batch=args.batch, max_len=args.max_len,
+                      prefill_len=args.prompt_budget,
+                      small=args.grid == "small")
+    results, winner = search(cfg, shape, cells,
+                             objective=args.objective,
+                             ttft_slo_ms=args.ttft_slo_ms,
+                             alpha=args.alpha)
+    print(f"# autotune: {len(cells)} cells, objective={args.objective}"
+          + (f", ttft_slo={args.ttft_slo_ms}ms"
+             if args.ttft_slo_ms else ""))
+    for line in table_lines(results, winner):
+        print(line)
+    if winner is None:
+        print("# no admissible configuration")
+        return 1
+    print("# winning ServeConfig kwargs:")
+    print(json.dumps(winner["knobs"].to_dict(), indent=1))
+    if args.json:
+        payload = {
+            "objective": args.objective,
+            "ttft_slo_ms": args.ttft_slo_ms,
+            "workload": shape.to_dict(),
+            "winner": winner["knobs"].to_dict(),
+            "winner_prediction": winner["prediction"],
+            "table": [{"knobs": r["knobs"].to_dict(),
+                       "prediction": r["prediction"],
+                       "admissible": r["admissible"]}
+                      for r in results],
+        }
+        with open(args.json, "w") as f:
+            json.dump(payload, f, indent=1)
+        print(f"# wrote {args.json}")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -3,28 +3,19 @@
 Self-speculative decoding (``ServeConfig.spec_decode``) drafts
 ``spec_k`` tokens with the quantized program and verifies them in one
 dense multi-token forward.  Its payoff is governed by a single scalar —
-the per-draft acceptance rate ``alpha`` — through the standard
-geometric-run model: a round emits the accepted draft prefix plus one
-more token (the correction on the first rejection, or the bonus token
-when everything survives), so
-
-    E[tokens/round](alpha, k) = 1 + alpha + ... + alpha^k
-                              = (1 - alpha^(k+1)) / (1 - alpha)
-
-and the per-token speedup over an autoregressive dense engine (one
-dense forward per token) is
-
-    speedup = E[tokens/round] / (k * c_draft + c_verify)
-
-where ``c_draft`` is a draft forward's cost relative to a dense decode
-forward and ``c_verify`` the (k+1)-token verify forward's.  The report
-tabulates both across acceptance rates and ``k``, inverts measured
-``tokens_per_step`` back to an implied acceptance, and — given a
-``BENCH_serve.json`` with spec rows — checks the live engine against
-the model: the measured ``acceptance_rate`` must sit within 10 points
-of the value implied by its own ``tokens_per_step`` (they are coupled
-through the geometric model; a larger gap means the engine is emitting
-tokens the model can't explain, i.e. an accounting bug).
+the per-draft acceptance rate ``alpha`` — through the geometric-run
+model that lives in ``repro.capacity.spec_math`` (this file re-exports
+it; the serving-capacity predictor builds on the same functions, so the
+table below and capacity predictions cannot drift apart).  The report
+tabulates expected tokens/round and speedup across acceptance rates
+and ``k``, inverts measured ``tokens_per_step`` back to an implied
+acceptance, and — given a ``BENCH_serve.json`` with spec rows — checks
+the live engine against the model: the measured ``acceptance_rate``
+must sit within 10 points of the value implied by its own
+``tokens_per_step`` (they are coupled through the geometric model; a
+larger gap means the engine is emitting tokens the model can't
+explain, i.e. an accounting bug).  ``tests/test_capacity.py`` runs the
+same check in tier-1 against the committed bench.
 
     PYTHONPATH=src python tools/spec_report.py
     PYTHONPATH=src python tools/spec_report.py \
@@ -36,55 +27,20 @@ from __future__ import annotations
 
 import argparse
 import json
+import os
+import sys
+
+sys.path.insert(0, os.path.join(
+    os.path.dirname(os.path.dirname(os.path.abspath(__file__))), "src"))
+
+from repro.capacity.spec_math import (  # noqa: E402  (re-exported API)
+    acceptance_from_tokens_per_step,
+    expected_tokens_per_round,
+    speedup,
+)
 
 __all__ = ["expected_tokens_per_round", "speedup",
            "acceptance_from_tokens_per_step", "validate_bench"]
-
-
-def expected_tokens_per_round(alpha: float, k: int) -> float:
-    """E[tokens emitted per draft+verify round] for per-draft
-    acceptance ``alpha`` and draft length ``k`` (geometric-run model:
-    accepted prefix + correction/bonus)."""
-    if not 0.0 <= alpha <= 1.0:
-        raise ValueError(f"alpha must be in [0, 1], got {alpha}")
-    if k < 1:
-        raise ValueError(f"k must be >= 1, got {k}")
-    if alpha == 1.0:
-        return float(k + 1)
-    return (1.0 - alpha ** (k + 1)) / (1.0 - alpha)
-
-
-def speedup(alpha: float, k: int, c_draft: float = 0.5,
-            c_verify: float = 1.0) -> float:
-    """Per-token speedup over the autoregressive dense engine.  Costs
-    are relative to one dense single-token decode forward; c_draft is
-    the *quantized* draft forward (< 1 when the nibble path is cheaper,
-    which is the paper's premise), c_verify the one (k+1)-token dense
-    forward (≈ 1 while decode stays memory-bound: the weights are read
-    once either way)."""
-    if c_draft <= 0 or c_verify <= 0:
-        raise ValueError("relative costs must be positive")
-    return expected_tokens_per_round(alpha, k) / (k * c_draft + c_verify)
-
-
-def acceptance_from_tokens_per_step(tps: float, k: int,
-                                    tol: float = 1e-9) -> float:
-    """Invert E[tokens/round] for ``alpha`` by bisection (the map is
-    strictly increasing on [0, 1]).  ``tps`` must lie in
-    [1, k + 1]; the endpoints invert exactly."""
-    if k < 1:
-        raise ValueError(f"k must be >= 1, got {k}")
-    if not 1.0 <= tps <= k + 1:
-        raise ValueError(f"tokens_per_step {tps} outside [1, {k + 1}] "
-                         f"for k={k}")
-    lo, hi = 0.0, 1.0
-    while hi - lo > tol:
-        mid = 0.5 * (lo + hi)
-        if expected_tokens_per_round(mid, k) < tps:
-            lo = mid
-        else:
-            hi = mid
-    return 0.5 * (lo + hi)
 
 
 def report_lines(k_values=(2, 4, 8), alphas=(0.5, 0.6, 0.7, 0.8, 0.9,
